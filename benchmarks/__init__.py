@@ -1,0 +1,10 @@
+"""Benchmark harness: one module per paper table/figure (Table 5.1,
+Figs 5.2/5.3/5.5/5.8) + accuracy ledger + roofline reader."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax as _jax
+
+_jax.config.update("jax_enable_x64", True)  # f64 FMM oracle paths

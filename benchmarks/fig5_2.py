@@ -1,0 +1,33 @@
+"""Fig 5.2 reproduction: total evaluation time vs N_d (sources per leaf box).
+
+The paper finds a broad optimum near N_d=45 on the GPU / 35 on the CPU: few
+particles per box shifts work into M2L/tree overhead, many per box into the
+quadratic P2P. We sweep the tree depth at fixed N, which steps N_d by 4x."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import FmmConfig
+from repro.data.synthetic import particles
+from .fmm_phases import phase_times
+
+
+def run(n: int = 1 << 14, p: int = 17):
+    z, q = particles("uniform", n, 0)
+    rows = []
+    best = (None, float("inf"))
+    for levels in (3, 4, 5, 6):
+        nd = n / 4**levels
+        if nd < 2:
+            continue
+        cfg = FmmConfig(n=n, nlevels=levels, p=p)
+        times = phase_times(jnp.asarray(z), jnp.asarray(q), cfg, repeats=2)
+        total = sum(times.values())
+        rows.append((f"fig5_2/Nd={nd:.0f}", total * 1e6,
+                     f"p2p={100*times['p2p']/total:.0f}% "
+                     f"m2l={100*times['m2l']/total:.0f}% "
+                     f"sort={100*times['sort']/total:.0f}%"))
+        if total < best[1]:
+            best = (nd, total)
+    rows.append(("fig5_2/optimum_Nd", best[1] * 1e6, f"Nd={best[0]:.0f}"))
+    return rows

@@ -1,0 +1,24 @@
+"""Fig 5.3/5.4 reproduction: phase cost vs number of expansion terms p.
+
+Paper: initialization/evaluation scale linearly in p, shift operators have
+linear pre/post-scaling plus a quadratic core; the optimal N_d grows
+~linearly with p (Fig 5.4)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import FmmConfig
+from repro.data.synthetic import particles
+from .fmm_phases import phase_times
+
+
+def run(n: int = 1 << 14):
+    z, q = particles("uniform", n, 0)
+    rows = []
+    for p in (5, 11, 17, 25):
+        cfg = FmmConfig(n=n, nlevels=3, p=p)
+        t = phase_times(jnp.asarray(z), jnp.asarray(q), cfg, repeats=2)
+        rows.append((f"fig5_3/p={p}", sum(t.values()) * 1e6,
+                     f"m2l={t['m2l']*1e6:.0f}us p2m={t['p2m']*1e6:.0f}us "
+                     f"l2p={t['l2p']*1e6:.0f}us p2p={t['p2p']*1e6:.0f}us"))
+    return rows

@@ -1,0 +1,44 @@
+"""Fig 5.5/5.6 reproduction: FMM vs direct summation break-even point.
+
+Paper: the GPU FMM overtakes direct summation at N ~ 3500 (p=17,
+TOL~1e-6). We measure both on this backend and report the crossover."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FmmConfig, direct_potential, fmm_potential
+from repro.core.config import num_levels_for
+from repro.data.synthetic import particles
+
+
+def _best(fn, *args, repeats=3):
+    fn(*args).block_until_ready()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(p: int = 17):
+    rows = []
+    crossover = None
+    for logn in (9, 10, 11, 12, 13):
+        n = 1 << logn
+        z, q = particles("uniform", n, 0)
+        z, q = jnp.asarray(z), jnp.asarray(q)
+        lv = max(1, num_levels_for(n, 45))
+        cfg = FmmConfig(n=n, nlevels=lv, p=p)
+        t_fmm = _best(lambda a, b: fmm_potential(a, b, cfg), z, q)
+        t_dir = _best(lambda a, b: direct_potential(a, b, b * 0 + q), z, z)
+        rows.append((f"fig5_5/N={n}", t_fmm * 1e6,
+                     f"direct={t_dir*1e6:.0f}us ratio={t_dir/t_fmm:.2f}"))
+        if crossover is None and t_fmm < t_dir:
+            crossover = n
+    rows.append(("fig5_5/breakeven_N", 0.0,
+                 f"N={crossover} (paper GPU: ~3500)"))
+    return rows

@@ -1,0 +1,94 @@
+"""Per-phase FMM timing on the current backend (CPU here; the same jitted
+callables run on TPU). Phases follow the paper's Table 5.1 naming."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (FmmConfig, build_connectivity, build_tree,
+                        leaf_particle_index)
+from repro.core import expansions as E
+from repro.core import fmm as F
+
+
+def _timed(fn, *args, repeats=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def phase_times(z, q, cfg: FmmConfig, repeats: int = 3) -> dict[str, float]:
+    """Seconds per phase (best of ``repeats`` post-compile)."""
+    times: dict[str, float] = {}
+
+    build_j = jax.jit(functools.partial(build_tree, cfg=cfg))
+    times["sort"], tree = _timed(build_j, z, q, repeats=repeats)
+
+    conn_j = jax.jit(functools.partial(build_connectivity, cfg=cfg))
+    times["connect"], conn = _timed(conn_j, tree, repeats=repeats)
+
+    rho = F.effective_radii(tree, cfg)
+
+    p2m_j = jax.jit(lambda tree: F.p2m(tree, cfg))
+    times["p2m"], mult_leaf = _timed(p2m_j, tree, repeats=repeats)
+
+    def all_m2m(tree, leaf):
+        m = [None] * (cfg.nlevels + 1)
+        m[cfg.nlevels] = leaf
+        for l in range(cfg.nlevels - 1, -1, -1):
+            m[l] = F.m2m_level(m[l + 1], tree, l, cfg, rho[l + 1], rho[l])
+        return m
+
+    m2m_j = jax.jit(all_m2m)
+    times["m2m"], mult = _timed(m2m_j, tree, mult_leaf, repeats=repeats)
+
+    hm = jnp.asarray(E.m2l_matrix(cfg.p), dtype=cfg.real_dtype)
+
+    def all_m2l(tree, conn, mult):
+        return [F.m2l_level(mult[l], conn.weak[l], tree.centers[l], cfg, hm,
+                            rho[l])
+                for l in range(1, cfg.nlevels + 1)]
+
+    m2l_j = jax.jit(all_m2l)
+    times["m2l"], locs = _timed(m2l_j, tree, conn, mult, repeats=repeats)
+
+    def all_l2l(tree, locs):
+        local = jnp.zeros((1, cfg.p + 1), locs[0].dtype)
+        for l in range(1, cfg.nlevels + 1):
+            local = F.l2l_level(local, tree, l, cfg, rho[l], rho[l - 1]) \
+                + locs[l - 1]
+        return local
+
+    l2l_j = jax.jit(all_l2l)
+    times["l2l"], local = _timed(l2l_j, tree, locs, repeats=repeats)
+
+    idx = jnp.asarray(leaf_particle_index(cfg))
+    if cfg.use_p2l_m2p:
+        p2l_j = jax.jit(lambda local, tree, conn: F.p2l_sweep(
+            local, tree, conn, cfg, idx, rho[cfg.nlevels]))
+        times["p2l"], local = _timed(p2l_j, local, tree, conn,
+                                     repeats=repeats)
+
+    l2p_j = jax.jit(lambda local, tree: F.l2p(local, tree, cfg))
+    times["l2p"], phi = _timed(l2p_j, local, tree, repeats=repeats)
+
+    if cfg.use_p2l_m2p:
+        m2p_j = jax.jit(lambda phi, leaf, tree, conn: F.m2p_sweep(
+            phi, leaf, tree, conn, cfg))
+        times["m2p"], phi = _timed(m2p_j, phi, mult_leaf, tree, conn,
+                                   repeats=repeats)
+
+    p2p_j = jax.jit(lambda phi, tree, conn: F.p2p_sweep(
+        phi, tree, conn, cfg, idx))
+    times["p2p"], phi = _timed(p2p_j, phi, tree, conn, repeats=repeats)
+    return times

@@ -1,0 +1,173 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh) cell, all per chip per step:
+
+  compute_s    = analytic model FLOPs / peak        (XLA's cost_analysis
+                 counts while bodies once — measured — so FLOPs come from
+                 the standard analytic model: 6*N_active*T (+attention
+                 quadratic term, + recurrent-mixer terms); this is also
+                 the MFU numerator, so fraction = compute/max(terms))
+  memory_s     = analytic HBM bytes / HBM bandwidth (params/grads/optimizer
+                 traffic + KV cache + activation-working-set model; the
+                 measured temp_size is reported alongside but overstates
+                 bf16 models on the CPU backend, which float-normalizes
+                 bf16 dots to f32 and hoists the converts)
+  collective_s = HLO-measured collective bytes (trip-count weighted) / ICI
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HW = {"peak": 197e12, "hbm": 819e9, "ici": 50e9, "hbm_cap": 16 * 1024**3}
+
+
+def model_flops_per_chip(cfg, shape, kind, n_chips):
+    """Useful model FLOPs per chip (the MFU numerator): 6ND train / 2ND
+    forward + the attention context term + recurrent-mixer terms."""
+    S, B = shape.seq, shape.global_batch
+    tokens = B * (S if kind != "decode" else 1)
+    n_act = cfg.active_param_count()
+    L = cfg.n_layers
+    L_attn = int(round(cfg.attn_fraction * L))
+    H, dh = cfg.n_heads, cfg.d_head
+    d = cfg.d_model
+    bwd = 3 if kind == "train" else 1
+
+    flops = 2 * n_act * tokens * bwd
+    ctx = S
+    att = 4 * tokens * ctx * H * dh * L_attn \
+        * (0.5 if kind != "decode" else 1.0) * bwd
+    L_mamba = sum(m == "mamba" for m, _ in cfg.group) * cfg.n_groups
+    L_rwkv = sum(m == "rwkv" for m, _ in cfg.group) * cfg.n_groups
+    di = cfg.mamba_expand * d
+    rec = tokens * (L_mamba * 10 * di * cfg.d_state
+                    + L_rwkv * 6 * d * cfg.rwkv_head_size) * bwd
+    return (flops + att + rec) / n_chips
+
+
+def compute_overhead_factor(cfg, kind, tp: int = 16):
+    """Non-useful compute multipliers, derived from config knobs:
+
+      remat       "full" re-runs the forward in the backward (+1 of 3
+                  passes -> 4/3), "dots" saves matmul outputs (~1.05)
+      MoE         capacity-factor padding runs cf x expert flops
+      TP padding  head counts not divisible by TP pad to the next multiple
+    """
+    f = 1.0
+    if kind == "train":
+        f *= {"full": 4.0 / 3.0, "dots": 1.05, "none": 1.0}[cfg.remat]
+    if cfg.n_experts:
+        moe_share = 0.6  # expert flops share of total (dominant for MoE)
+        f *= (1 - moe_share) + moe_share * cfg.capacity_factor
+    if cfg.n_heads % tp:
+        pad = (-(-cfg.n_heads // tp) * tp) / cfg.n_heads
+        attn_share = 0.25
+        f *= (1 - attn_share) + attn_share * pad
+    return f
+
+
+def analytic_hbm_per_chip(cfg, shape, kind, n_chips, opt_name, num_micro=1):
+    """Whole-step HBM traffic / chips (documented component model)."""
+    S, B = shape.seq, shape.global_batch
+    n_tot = cfg.param_count()
+    d = cfg.d_model
+    L = cfg.n_layers
+    p_shard = 2 * n_tot / n_chips                    # bf16 params per chip
+
+    if kind == "train":
+        tokens_chip = B * S / n_chips
+        # weights: fwd + bwd + remat-recompute reads per microbatch
+        w = 3 * num_micro * p_shard
+        # grads: f32 accumulate (read+write per micro) + optimizer read
+        g = (2 * num_micro + 1) * 4 * n_tot / n_chips
+        # optimizer state read+write (adamw: m,v f32; adafactor: ~m bf16)
+        o = (16 if opt_name == "adamw" else 5) * n_tot / n_chips
+        # activations: ~14 residual-sized tensors per layer fwd+bwd, bf16
+        a = 28 * tokens_chip * d * L * 2
+        return w + g + o + a
+    if kind == "prefill":
+        tokens_chip = B * S / n_chips
+        kv_write = 2 * B * S * cfg.n_kv * cfg.d_head * 2 * \
+            int(round(cfg.attn_fraction * L)) / n_chips
+        return p_shard + 14 * tokens_chip * d * L * 2 + kv_write
+    # decode
+    L_attn = int(round(cfg.attn_fraction * L))
+    cache = 2 * B * S * cfg.n_kv * cfg.d_head * 2 * L_attn / n_chips
+    return p_shard + cache
+
+
+def load_cells(art_dir: str = "artifacts/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(rec, cfg=None, shape=None):
+    """Compute the table row for one artifact record."""
+    from repro.configs import SHAPES, get_config, get_opt
+
+    if rec.get("status") != "ok":
+        return None
+    if rec["arch"] == "fmm2d":
+        terms = rec["roofline_terms_s"]
+        dom = max(terms, key=terms.get)
+        frac = terms["compute_s"] / max(max(terms.values()), 1e-30)
+        return {**rec, "terms": terms, "dominant": dom, "fraction": frac,
+                "hbm_analytic": rec.get("hbm_used", 0)}
+    cfg = cfg or get_config(rec["arch"])
+    shape = shape or SHAPES[rec["shape"]]
+    kind = rec["kind"]
+    n = rec["n_chips"]
+    oc = get_opt(rec["arch"])
+    num_micro = max(1, (shape.global_batch // (n // 16 if n > 256 else 16))
+                    // max(1, 8192 // shape.seq)) if kind == "train" else 1
+    useful = model_flops_per_chip(cfg, shape, kind, n)
+    overhead = compute_overhead_factor(cfg, kind)
+    hbm = analytic_hbm_per_chip(cfg, shape, kind, n, oc.name, num_micro)
+    coll = rec["collectives"].get("total", 0.0) / n
+    terms = {
+        "compute_s": useful * overhead / HW["peak"],
+        "memory_s": hbm / HW["hbm"],
+        "collective_s": coll / HW["ici"],
+    }
+    dom = max(terms, key=terms.get)
+    # roofline fraction == achievable MFU upper bound: useful-compute time
+    # over the critical-path term (ideal compute/comm overlap assumed)
+    frac = (useful / HW["peak"]) / max(max(terms.values()), 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": kind, "terms": terms, "dominant": dom, "fraction": frac,
+        "model_flops_per_chip": useful,
+        "compute_overhead": overhead,
+        "hbm_analytic": hbm, "measured": rec.get("memory", {}),
+        "collective_bytes_per_chip": coll,
+    }
+
+
+def run(art_dir: str = "artifacts/dryrun"):
+    rows = []
+    for rec in load_cells(art_dir):
+        if rec.get("status") == "skipped":
+            rows.append((f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+                         0.0, "SKIPPED(" + rec["reason"][:40] + ")"))
+            continue
+        if rec.get("status") == "failed":
+            rows.append((f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}",
+                         0.0, "FAILED " + rec.get("error", "")[:60]))
+            continue
+        r = roofline_row(rec)
+        t = r["terms"]
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            max(t.values()) * 1e6,
+            f"dom={r['dominant'][:-2]} frac={r['fraction']:.3f} "
+            f"c={t['compute_s']:.2e} m={t['memory_s']:.2e} "
+            f"x={t['collective_s']:.2e}",
+        ))
+    return rows

@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure plus the roofline
+reader. Prints ``name,us_per_call,derived`` CSV (see README).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table5_1 fig5_5 ...]
+    PYTHONPATH=src python -m benchmarks.run --quick   (CI-sized inputs)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller N (CI-friendly)")
+    args = ap.parse_args()
+
+    from . import accuracy, fig5_2, fig5_3, fig5_5, fig5_8, roofline, table5_1
+
+    quick_kwargs = {
+        "table5_1": {"n": 45 * 256},
+        "fig5_2": {"n": 1 << 13},
+        "fig5_3": {"n": 1 << 12},
+        "fig5_5": {},
+        "fig5_8": {"n": 1 << 13},
+        "accuracy": {"n": 2048},
+        "roofline": {},
+    }
+    benches = {
+        "table5_1": table5_1.run,
+        "fig5_2": fig5_2.run,
+        "fig5_3": fig5_3.run,
+        "fig5_5": fig5_5.run,
+        "fig5_8": fig5_8.run,
+        "accuracy": accuracy.run,
+        "roofline": roofline.run,
+    }
+    names = args.only or list(benches)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            kwargs = quick_kwargs.get(name, {}) if args.quick else {}
+            for row in benches[name](**kwargs):
+                label, us, derived = row
+                print(f"{label},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception:
+            failed.append(name)
+            print(f"{name},nan,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Table 5.1 reproduction: time distribution of the FMM phases at the
+calibrated N_d ~ 45 (paper: P2P 43%, sort 30%, M2L 11%, P2M 5%, L2P 2%,
+connect 1% on the C2075; here: same structure measured on this backend)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.fmm2d import N_D, P_TERMS, fmm_config
+from repro.data.synthetic import particles
+from .fmm_phases import phase_times
+
+
+def run(n: int = 45 * 512, p: int = P_TERMS, dist: str = "uniform"):
+    z, q = particles(dist, n, 0)
+    cfg = fmm_config(n, p=p)
+    times = phase_times(jnp.asarray(z), jnp.asarray(q), cfg)
+    total = sum(times.values())
+    rows = []
+    for k, v in sorted(times.items(), key=lambda kv: -kv[1]):
+        rows.append((f"table5_1/{k}", v * 1e6, f"{100*v/total:.1f}%"))
+    rows.append(("table5_1/total", total * 1e6,
+                 f"N={n} Nd~{N_D} p={p} levels={cfg.nlevels}"))
+    return rows

@@ -1,0 +1,13 @@
+"""Batched serving example: prefill a batch of prompts, then greedy-decode
+continuations through the same decode_step the dry-run lowers at 32k/500k.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-1.6b --gen 48
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

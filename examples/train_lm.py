@@ -1,0 +1,82 @@
+"""End-to-end LM training driver on the shared runtime: a GPT-style model
+on the synthetic modular-arithmetic stream, with async checkpointing,
+straggler monitoring and deterministic restart.
+
+Default is CPU-sized (~10M params, 300 steps, loss visibly drops);
+--preset 100m trains the ~100M-param config (same code path; give it a
+real accelerator or patience).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300] [--preset 10m]
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager, latest_step
+from repro.data.synthetic import DataConfig, lm_batch
+from repro.launch.runtime import StragglerMonitor, train_loop
+from repro.launch.steps import make_train_step
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import OptConfig, init_opt_state
+
+PRESETS = {
+    "10m": dict(n_layers=4, d_model=256, n_heads=4, n_kv=2, d_ff=1024,
+                vocab=8192),
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv=4, d_ff=3072,
+                 vocab=32768),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="10m", choices=PRESETS)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="runs/train_lm")
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name=f"gpt-{args.preset}", tie_embeddings=True,
+                      param_dtype="float32", compute_dtype="float32",
+                      attn_chunk=128, loss_chunk=64, remat="dots",
+                      **PRESETS[args.preset])
+    oc = OptConfig(name="adamw", lr=args.lr, warmup=20,
+                   total_steps=args.steps, weight_decay=0.01)
+    dc = DataConfig(vocab=cfg.vocab, batch=args.batch, seq=args.seq, seed=0)
+
+    params = lm.make_params(cfg, 0)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train_lm] {cfg.name}: {n/1e6:.1f}M params")
+
+    state = {"params": params, "opt": init_opt_state(params, oc),
+             "step": jnp.zeros((), jnp.int32)}
+    cm = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if latest_step(args.ckpt_dir) is not None:
+        state, start = cm.restore_latest()
+        state["step"] = jnp.asarray(state["step"])
+        print(f"[train_lm] resumed from step {start}")
+
+    step_jit = jax.jit(make_train_step(cfg, oc), donate_argnums=(0,))
+    state, summary = train_loop(
+        lambda s, b, i: step_jit(s, b),
+        state, lambda s: lm_batch(dc, s), start_step=start,
+        num_steps=args.steps, ckpt_manager=cm, ckpt_every=100,
+        monitor=StragglerMonitor(), log_every=20)
+
+    losses = summary["losses"]
+    print(f"[train_lm] loss {losses[0]:.3f} -> {losses[-1]:.3f} over "
+          f"{len(losses)} steps (median {summary['median_step_time']*1e3:.0f}"
+          f" ms/step)")
+    assert losses[-1] < losses[0] - 0.5, "no learning progress"
+    print("[train_lm] OK")
+
+
+if __name__ == "__main__":
+    main()

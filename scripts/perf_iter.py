@@ -1,0 +1,87 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration harness: one dry-run cell with ModelConfig overrides.
+
+    PYTHONPATH=src python scripts/perf_iter.py --arch qwen2-72b \
+        --shape train_4k --tag remat_dots --set remat=dots
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+sys.path.insert(0, ".")
+
+
+def parse_val(v):
+    for cast in (int, float):
+        try:
+            return cast(v)
+        except ValueError:
+            pass
+    return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--out", default="artifacts/perf")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import SHAPES, get_config, get_opt
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.launch.dryrun import (HW, cost_analysis_dict,
+                                     memory_analysis_dict)
+    from repro.launch.hlo_analysis import collective_bytes_weighted
+
+    overrides = dict(kv.split("=", 1) for kv in args.set)
+    overrides = {k: parse_val(v) for k, v in overrides.items()}
+    cfg = dataclasses.replace(get_config(args.arch), **overrides)
+    shape = SHAPES[args.shape]
+    multi_pod = args.mesh == "multipod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        cell = build_cell(cfg, get_opt(args.arch), shape, mesh, multi_pod)
+        compiled = cell.jitted.lower(*cell.args).compile()
+        mem = memory_analysis_dict(compiled)
+        cost = cost_analysis_dict(compiled)
+        coll = collective_bytes_weighted(compiled.as_text())
+
+    # analytic roofline with the modified config
+    from benchmarks.roofline import roofline_row
+    rec = {"status": "ok", "arch": args.arch, "shape": args.shape,
+           "mesh": args.mesh, "kind": cell.kind,
+           "n_chips": int(mesh.devices.size), "collectives": coll,
+           "memory": mem, "cost": cost}
+    row = roofline_row(rec, cfg=cfg, shape=shape)
+    out = {**rec, "tag": args.tag, "overrides": overrides,
+           "terms": row["terms"], "fraction": row["fraction"],
+           "dominant": row["dominant"],
+           "hbm_analytic": row["hbm_analytic"],
+           "compile_s": round(time.time() - t0, 1)}
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{args.mesh}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, default=str)
+    t = row["terms"]
+    print(f"[perf_iter] {args.tag}: frac={row['fraction']:.3f} "
+          f"dom={row['dominant']} c={t['compute_s']:.3e} "
+          f"m={t['memory_s']:.3e} x={t['collective_s']:.3e} "
+          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.1f}GiB "
+          f"hbm_analytic={row['hbm_analytic']/2**30:.1f}GiB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""repro: production-grade JAX reproduction of "Adaptive fast multipole
+methods on the GPU" (Goude & Engblom, 2012) + multi-pod LM runtime for the
+assigned architecture pool. See DESIGN.md."""
+
+__version__ = "0.1.0"

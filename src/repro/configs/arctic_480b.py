@@ -1,0 +1,12 @@
+"""arctic-480b [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000,
+MoE 128 experts top-2 PLUS parallel dense residual MLP.
+[hf:Snowflake/snowflake-arctic-base]"""
+from ..models.config import ModelConfig
+from ..optim import OptConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", n_layers=35, d_model=7168, n_heads=56, n_kv=8,
+    d_ff=4864, vocab=32000, group=(("attn", "moe+mlp"),), n_experts=128,
+    top_k=2, act="silu", glu=True, norm="rms", pos="rope", rope_theta=1e4,
+)
+OPT = OptConfig(name="adafactor", lr=2e-4)

@@ -1,0 +1,11 @@
+"""dbrx-132b [moe]: 40L d_model=6144 48H (GQA kv=8) d_ff=10752 vocab=100352,
+MoE 16 experts top-4, fine-grained. [hf:databricks/dbrx-base]"""
+from ..models.config import ModelConfig
+from ..optim import OptConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", n_layers=40, d_model=6144, n_heads=48, n_kv=8,
+    d_ff=10752, vocab=100352, group=(("attn", "moe"),), n_experts=16,
+    top_k=4, act="silu", glu=True, norm="rms", pos="rope", rope_theta=5e5,
+)
+OPT = OptConfig(name="adafactor", lr=2e-4)

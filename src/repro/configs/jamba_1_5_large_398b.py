@@ -1,0 +1,17 @@
+"""jamba-1.5-large-398b [hybrid]: 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16e top-2, Mamba:attn 7:1 interleave, MoE on
+every other layer. [arXiv:2403.19887]"""
+from ..models.config import ModelConfig
+from ..optim import OptConfig
+
+_GROUP = (
+    ("mamba", "mlp"), ("mamba", "moe"), ("mamba", "mlp"), ("attn", "moe"),
+    ("mamba", "mlp"), ("mamba", "moe"), ("mamba", "mlp"), ("mamba", "moe"),
+)
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b", n_layers=72, d_model=8192, n_heads=64,
+    n_kv=8, d_ff=24576, vocab=65536, group=_GROUP, n_experts=16, top_k=2,
+    act="silu", glu=True, norm="rms", pos="none",  # jamba: no positional enc
+    d_state=16, d_conv=4, mamba_expand=2,
+)
+OPT = OptConfig(name="adafactor", lr=2e-4)

@@ -1,0 +1,15 @@
+"""llava-next-mistral-7b [vlm]: mistral-7b backbone 32L d_model=4096 32H
+(GQA kv=8) d_ff=14336 vocab=32000; anyres image tiling is a STUB — the
+frontend supplies precomputed patch embeddings (per the assignment) which a
+trained 2-layer MLP projector maps into the LM.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf]"""
+from ..models.config import ModelConfig
+from ..optim import OptConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-mistral-7b", arch="vlm", n_layers=32, d_model=4096,
+    n_heads=32, n_kv=8, d_ff=14336, vocab=32000, act="silu", glu=True,
+    norm="rms", pos="rope", rope_theta=1e6,
+    n_img_tokens=576, img_feat_dim=1024,
+)
+OPT = OptConfig(name="adafactor", lr=2e-4)

@@ -1,0 +1,11 @@
+"""nemotron-4-340b [dense]: 96L d_model=18432 96H (GQA kv=8) d_ff=73728
+vocab=256000, squared-ReLU MLP (no GLU). [arXiv:2402.16819]"""
+from ..models.config import ModelConfig
+from ..optim import OptConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b", n_layers=96, d_model=18432, n_heads=96, n_kv=8,
+    d_ff=73728, vocab=256000, act="relu2", glu=False, norm="ln",
+    pos="rope", rope_theta=1e4,
+)
+OPT = OptConfig(name="adafactor", lr=1e-4)

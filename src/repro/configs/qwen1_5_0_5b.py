@@ -1,0 +1,11 @@
+"""qwen1.5-0.5b [dense]: 24L d_model=1024 16H (MHA kv=16) d_ff=2816
+vocab=151936, QKV bias. [hf:Qwen/Qwen1.5-0.5B]"""
+from ..models.config import ModelConfig
+from ..optim import OptConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-0.5b", n_layers=24, d_model=1024, n_heads=16, n_kv=16,
+    d_ff=2816, vocab=151936, qkv_bias=True, act="silu", glu=True,
+    norm="rms", pos="rope", rope_theta=1e6, tie_embeddings=True,
+)
+OPT = OptConfig(name="adamw", lr=3e-4)

@@ -1,0 +1,11 @@
+"""qwen2-72b [dense]: 80L d_model=8192 64H (GQA kv=8) d_ff=29568
+vocab=152064, QKV bias. [arXiv:2407.10671]"""
+from ..models.config import ModelConfig
+from ..optim import OptConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b", n_layers=80, d_model=8192, n_heads=64, n_kv=8,
+    d_ff=29568, vocab=152064, qkv_bias=True, act="silu", glu=True,
+    norm="rms", pos="rope", rope_theta=1e6,
+)
+OPT = OptConfig(name="adafactor", lr=2e-4)

@@ -1,0 +1,11 @@
+"""qwen3-0.6b [dense]: 28L d_model=1024 16H (GQA kv=8) d_ff=3072
+vocab=151936, qk_norm, head_dim=128. [hf:Qwen/Qwen3-0.6B]"""
+from ..models.config import ModelConfig
+from ..optim import OptConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b", n_layers=28, d_model=1024, n_heads=16, n_kv=8,
+    d_head=128, d_ff=3072, vocab=151936, qk_norm=True, act="silu",
+    glu=True, norm="rms", pos="rope", rope_theta=1e6, tie_embeddings=True,
+)
+OPT = OptConfig(name="adamw", lr=3e-4)

@@ -1,0 +1,11 @@
+"""rwkv6-1.6b [ssm] "Finch": 24L d_model=2048 (attention-free) d_ff=7168
+vocab=65536, data-dependent decay. [arXiv:2404.05892]"""
+from ..models.config import ModelConfig
+from ..optim import OptConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b", n_layers=24, d_model=2048, n_heads=32, n_kv=32,
+    d_ff=7168, vocab=65536, group=(("rwkv", "rwkv_cm"),), glu=False,
+    act="relu", norm="ln", pos="none", rwkv_head_size=64,
+)
+OPT = OptConfig(name="adamw", lr=3e-4)

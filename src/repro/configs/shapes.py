@@ -1,0 +1,37 @@
+"""Assigned input-shape set (same 4 shapes for every LM arch).
+
+  train_4k     train_step   seq 4096,   global batch 256
+  prefill_32k  prefill      seq 32768,  global batch 32
+  decode_32k   serve_step   one token, 32768-token KV cache, batch 128
+  long_500k    serve_step   one token, 524288-token cache,  batch 1
+               (sub-quadratic archs only — full-attention archs skip it,
+                see DESIGN.md §4)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable(model_cfg, shape_name: str) -> tuple[bool, str]:
+    """(runs?, reason-if-skipped)."""
+    if shape_name == "long_500k" and not model_cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k dense-KV decode is "
+                       "the quadratic regime this shape excludes "
+                       "(DESIGN.md §4)")
+    return True, ""

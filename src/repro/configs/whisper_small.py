@@ -1,0 +1,16 @@
+"""whisper-small [audio]: enc-dec, 12+12L d_model=768 12H (MHA kv=12)
+d_ff=3072 vocab=51865. Conv frontend is a STUB: input_specs() provides
+precomputed frame embeddings (n_audio_ctx=1500 x feat). LayerNorm + GELU +
+learned decoder positions (table extended to cover the assigned 32k decode
+shape — a documented deviation from the 448 of the original).
+[arXiv:2212.04356]"""
+from ..models.config import ModelConfig
+from ..optim import OptConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small", arch="encdec", n_layers=12, enc_layers=12,
+    d_model=768, n_heads=12, n_kv=12, d_ff=3072, vocab=51865,
+    act="gelu", glu=False, norm="ln", pos="learned", max_pos=32768,
+    qkv_bias=True, n_audio_ctx=1500, img_feat_dim=128,
+)
+OPT = OptConfig(name="adamw", lr=3e-4)

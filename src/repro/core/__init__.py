@@ -1,0 +1,24 @@
+"""Adaptive fast multipole method (Goude & Engblom 2012) — TPU-native JAX.
+
+Public API:
+  FmmConfig, num_levels_for        — problem description / calibration
+  build_tree, build_connectivity   — topological phase
+  fmm_potential                    — end-to-end evaluation (jit)
+  direct_potential                 — O(N^2) oracle / baseline
+"""
+from .config import FmmConfig, num_levels_for, max_leaf_size
+from .tree import Tree, build_tree, leaf_particle_index, leaf_ids
+from .connectivity import Connectivity, build_connectivity, connectivity_stats
+from .fmm import (FmmPlan, fmm_build, fmm_evaluate, fmm_potential,
+                  fmm_potential_checked, fmm_potential_with_stats, p2m,
+                  upward, downward, l2p)
+from .direct import direct_potential, direct_potential_numpy, rel_error_inf
+
+__all__ = [
+    "FmmConfig", "num_levels_for", "max_leaf_size",
+    "Tree", "build_tree", "leaf_particle_index", "leaf_ids",
+    "Connectivity", "build_connectivity", "connectivity_stats",
+    "FmmPlan", "fmm_build", "fmm_evaluate", "fmm_potential",
+    "fmm_potential_checked", "fmm_potential_with_stats", "p2m", "upward", "downward", "l2p",
+    "direct_potential", "direct_potential_numpy", "rel_error_inf",
+]

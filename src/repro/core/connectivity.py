@@ -1,0 +1,139 @@
+"""Theta-criterion connectivity (paper §2, eq. (2.1)).
+
+Per level l, every box carries a *directed* strong list and a *directed*
+weak (M2L) list, padded to static caps — the paper's §4.3 design: the GPU
+(here: TPU) version deliberately duplicates symmetric pairs so each box's
+interactions can be computed independently without atomics; the paper
+measures the cost of this at ~1% of runtime.
+
+Candidates for box b at level l are exactly the children of the strong set
+of b's parent (paper §2); each candidate is classified by
+
+    well-separated(b, c)  <=>  R + theta*r <= theta*d,
+    R = max(r_b, r_c), r = min(r_b, r_c), d = |z_b - z_c|.
+
+At the leaf level, strong pairs are re-tested with r/R roles swapped
+(Carrier-Greengard optimization, paper §2): passing pairs become P2L (the
+larger box's particles shift directly into the smaller box's local
+expansion) / M2P (the smaller box's multipole is evaluated directly at the
+larger box's points) instead of P2P.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import FmmConfig
+from .tree import Tree
+
+_INT_MAX = jnp.iinfo(jnp.int32).max
+
+
+class Connectivity(NamedTuple):
+    strong: tuple[jax.Array, ...]   # level l: (4**l, strong_cap) int32, -1 pad
+    weak: tuple[jax.Array, ...]     # level l: (4**l, weak_cap)
+    p2p: jax.Array                  # leaf: (4**L, strong_cap)
+    p2l: jax.Array                  # leaf: (4**L, strong_cap)
+    m2p: jax.Array                  # leaf: (4**L, strong_cap)
+    overflow: jax.Array             # scalar int32; 0 iff no list overflowed
+
+
+def _compact(vals: jax.Array, mask: jax.Array, cap: int):
+    """Row-compact masked entries to the front, pad with -1, clip to cap.
+
+    Returns (compacted (B, cap), overflow (B,)) where overflow counts
+    entries dropped by the cap.
+    """
+    key = jnp.where(mask, vals, _INT_MAX)
+    srt = jnp.sort(key, axis=-1)
+    count = mask.sum(axis=-1)
+    kept = srt[..., :cap]
+    out = jnp.where(kept == _INT_MAX, -1, kept)
+    overflow = jnp.maximum(count - cap, 0)
+    return out, overflow
+
+
+def _theta_masks(cb, rb, cc, rc, valid, theta):
+    d = jnp.abs(cb[:, None] - cc)
+    big = jnp.maximum(rb[:, None], rc)
+    small = jnp.minimum(rb[:, None], rc)
+    wellsep = (big + theta * small) <= (theta * d)
+    return valid & wellsep, valid & ~wellsep
+
+
+def build_connectivity(tree: Tree, cfg: FmmConfig) -> Connectivity:
+    theta = cfg.theta
+    S, W = cfg.strong_cap, cfg.weak_cap
+    L = cfg.nlevels
+
+    strong = [jnp.zeros((1, S), jnp.int32).at[:, 1:].set(-1)]  # root: self
+    weak = [jnp.full((1, W), -1, jnp.int32)]
+    overflow = jnp.zeros((), jnp.int32)
+
+    for l in range(1, L + 1):
+        nb = 4**l
+        box = jnp.arange(nb, dtype=jnp.int32)
+        parent_strong = strong[l - 1][box // 4]                 # (nb, S)
+        pvalid = parent_strong >= 0
+        cand = (jnp.where(pvalid, parent_strong, 0)[:, :, None] * 4
+                + jnp.arange(4, dtype=jnp.int32)).reshape(nb, 4 * S)
+        valid = jnp.repeat(pvalid, 4, axis=-1)
+
+        cb, rb = tree.centers[l], tree.radii[l]
+        cc = cb[cand]
+        rc = jnp.where(valid, rb[cand], 0.0)
+        cc = jnp.where(valid, cc, 0.0)
+        weak_mask, strong_mask = _theta_masks(cb, rb, cc, rc, valid, theta)
+
+        s_l, s_of = _compact(cand, strong_mask, S)
+        w_l, w_of = _compact(cand, weak_mask, W)
+        strong.append(s_l)
+        weak.append(w_l)
+        overflow = jnp.maximum(overflow,
+                               jnp.maximum(s_of.max(), w_of.max()).astype(jnp.int32))
+
+    # ---- leaf-level swapped-theta reclassification -------------------------
+    st = strong[L]
+    valid = st >= 0
+    idx = jnp.where(valid, st, 0)
+    cb, rb = tree.centers[L], tree.radii[L]
+    cc = jnp.where(valid, cb[idx], 0.0)
+    rc = jnp.where(valid, rb[idx], 0.0)
+    d = jnp.abs(cb[:, None] - cc)
+    big = jnp.maximum(rb[:, None], rc)
+    small = jnp.minimum(rb[:, None], rc)
+    if cfg.use_p2l_m2p:
+        swapped = (small + theta * big) <= (theta * d)   # roles interchanged
+        p2l_mask = valid & swapped & (rc > rb[:, None])  # source box larger
+        m2p_mask = valid & swapped & (rc < rb[:, None])  # source box smaller
+        p2p_mask = valid & ~(p2l_mask | m2p_mask)
+    else:
+        p2l_mask = jnp.zeros_like(valid)
+        m2p_mask = jnp.zeros_like(valid)
+        p2p_mask = valid
+    p2p, of1 = _compact(st, p2p_mask, S)
+    p2l, of2 = _compact(st, p2l_mask, S)
+    m2p, of3 = _compact(st, m2p_mask, S)
+    overflow = jnp.maximum(
+        overflow,
+        jnp.maximum(jnp.maximum(of1.max(), of2.max()), of3.max()).astype(jnp.int32),
+    )
+
+    return Connectivity(strong=tuple(strong), weak=tuple(weak),
+                        p2p=p2p, p2l=p2l, m2p=m2p, overflow=overflow)
+
+
+def connectivity_stats(conn: Connectivity) -> dict:
+    """Interaction counts per phase (for the paper's Table 5.1 analysis)."""
+    out = {
+        "m2l_pairs": int(sum(int((w >= 0).sum()) for w in conn.weak)),
+        "p2p_pairs": int((conn.p2p >= 0).sum()),
+        "p2l_pairs": int((conn.p2l >= 0).sum()),
+        "m2p_pairs": int((conn.m2p >= 0).sum()),
+        "strong_max": max(int((s >= 0).sum(-1).max()) for s in conn.strong),
+        "weak_max": max(int((w >= 0).sum(-1).max()) for w in conn.weak),
+        "overflow": int(conn.overflow),
+    }
+    return out

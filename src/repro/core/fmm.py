@@ -1,0 +1,388 @@
+"""The adaptive FMM pipeline (paper §3.3) as a single jit-able function.
+
+Phases (paper naming):
+  topological: build_tree (sort) + build_connectivity (connect)
+  upward:      P2M (+ P2L) , M2M
+  downward:    M2L , L2L
+  evaluation:  L2P (+ M2P) , P2P
+
+The per-phase functions are exposed individually so the benchmark harness
+can time them (Table 5.1 / Figs 5.1, 5.3, 5.7) and so the Pallas kernels
+in ``repro.kernels`` can replace the hot ones (P2P, M2L) one at a time.
+
+Every shape is static given ``FmmConfig``; there is no data-dependent
+control flow — the adaptivity lives entirely in the *contents* of the
+padded interaction lists, which is the paper's central design point and
+exactly what pjit/TPU want.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import expansions as E
+from .config import FmmConfig
+from .connectivity import Connectivity, build_connectivity
+from .tree import Tree, build_tree, leaf_ids, leaf_particle_index
+
+
+class FmmPlan(NamedTuple):
+    """Static constants + built tree/connectivity for one evaluation."""
+
+    tree: Tree
+    conn: Connectivity
+
+
+def effective_radii(tree: Tree, cfg: FmmConfig) -> list[jax.Array]:
+    """Per-level normalization radii: the box radius floored at 1e-6 of the
+    level maximum (point-like boxes would otherwise produce 0/0 ratios).
+
+    All expansions are stored radius-normalized (a~_j = a_j rho^-j,
+    b~_l = b_l rho^l): translations then multiply only bounded ratios,
+    which is what makes deep trees work in f32 (the TPU dtype) — see
+    expansions.py."""
+    out = []
+    for l in range(cfg.nlevels + 1):
+        r = tree.radii[l]
+        out.append(jnp.maximum(r, 1e-6 * jnp.max(r) + 1e-300))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# upward phase
+# ---------------------------------------------------------------------------
+
+def p2m(tree: Tree, cfg: FmmConfig, rho=None) -> jax.Array:
+    """Leaf multipole expansions, radius-normalized; (4**L, p+1) complex."""
+    nb = cfg.nboxes
+    lid = jnp.asarray(leaf_ids(cfg))
+    if rho is None:
+        rho = effective_radii(tree, cfg)[cfg.nlevels]
+    w = (tree.z - tree.centers[cfg.nlevels][lid]) / rho[lid]
+
+    def seg(v):
+        return jax.ops.segment_sum(v, lid, num_segments=nb,
+                                   indices_are_sorted=True)
+
+    if cfg.kernel == "harmonic":
+        coeffs = [jnp.zeros(nb, tree.q.dtype)]
+        pw = tree.q / rho[lid]
+        for _ in range(cfg.p):
+            coeffs.append(-seg(pw))
+            pw = pw * w
+    else:  # log: a~_0 = sum q; a~_j = -sum q w^j / j  (w already /rho)
+        coeffs = [seg(tree.q)]
+        pw = tree.q
+        for j in range(1, cfg.p + 1):
+            pw = pw * w
+            coeffs.append(-seg(pw) / j)
+    return jnp.stack(coeffs, axis=-1)
+
+
+def m2m_level(child_coeffs: jax.Array, tree: Tree, l: int,
+              cfg: FmmConfig, rho_child, rho_parent) -> jax.Array:
+    """Shift level-(l+1) multipoles into level-l parents; sum 4 children."""
+    nb_child = 4 ** (l + 1)
+    parent = jnp.arange(nb_child, dtype=jnp.int32) // 4
+    t = tree.centers[l + 1] - tree.centers[l][parent]
+    u = t / rho_parent[parent]
+    ratio = (rho_child / rho_parent[parent]).astype(child_coeffs.dtype)
+    shifted = E.m2m_norm(child_coeffs, u, ratio)
+    return shifted.reshape(4**l, 4, cfg.p + 1).sum(axis=1)
+
+
+def upward(tree: Tree, cfg: FmmConfig, rho=None) -> list[jax.Array]:
+    """Normalized multipole coefficients per level (l -> (4**l, p+1))."""
+    if rho is None:
+        rho = effective_radii(tree, cfg)
+    m = [None] * (cfg.nlevels + 1)
+    m[cfg.nlevels] = p2m(tree, cfg, rho[cfg.nlevels])
+    for l in range(cfg.nlevels - 1, -1, -1):
+        m[l] = m2m_level(m[l + 1], tree, l, cfg, rho[l + 1], rho[l])
+    return m
+
+
+# ---------------------------------------------------------------------------
+# downward phase
+# ---------------------------------------------------------------------------
+
+def m2l_level(mult: jax.Array, weak: jax.Array, centers: jax.Array,
+              cfg: FmmConfig, mat, rho) -> jax.Array:
+    """Sum of M2L translations into each box of one level (normalized).
+
+    Chunked over the padded weak list to bound the (B, chunk, p+1) working
+    set — the jnp analogue of the paper's shared-memory staging; the Pallas
+    kernel (kernels/m2l.py) performs the same computation with explicit
+    VMEM tiles.
+    """
+    nb, W = weak.shape
+    c = cfg.m2l_chunk
+    pad = (-W) % c
+    wk_all = jnp.pad(weak, ((0, 0), (0, pad)), constant_values=-1)
+    chunks = wk_all.reshape(nb, -1, c).transpose(1, 0, 2)  # (n_chunks, nb, c)
+
+    def body(acc, wk):
+        mask = wk >= 0
+        src = jnp.where(mask, wk, 0)
+        a = jnp.where(mask[..., None], mult[src], 0.0)
+        r = jnp.where(mask, centers[:, None] - centers[src], 1.0)
+        rho_s = jnp.where(mask, rho[src], 0.0)
+        rho_t = rho[:, None]
+        if cfg.translations == "mxu":
+            contrib = E.m2l_norm(a, r, rho_s, rho_t, mat)
+        else:
+            contrib = E.m2l_norm_horner(a, r, rho_s, rho_t)
+        return acc + contrib.sum(axis=1), None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((nb, cfg.p + 1), mult.dtype),
+                          chunks)
+    return out
+
+
+def l2l_level(parent_local: jax.Array, tree: Tree, l: int,
+              cfg: FmmConfig, rho_child, rho_parent) -> jax.Array:
+    """Shift level-(l-1) locals down to level-l children (normalized)."""
+    nb = 4**l
+    parent = jnp.arange(nb, dtype=jnp.int32) // 4
+    s = tree.centers[l] - tree.centers[l - 1][parent]
+    v = s / rho_parent[parent]
+    ratio = (rho_child / rho_parent[parent]).astype(parent_local.dtype)
+    return E.l2l_norm(parent_local[parent], v, ratio)
+
+
+def p2l_sweep(local: jax.Array, tree: Tree, conn: Connectivity,
+              cfg: FmmConfig, idx: jax.Array, rho) -> jax.Array:
+    """Direct particle->local shifts for swapped-theta leaf pairs
+    (radius-normalized: b~_l = sum q/(x-z0) * (rho_t/(x-z0))^l).
+
+    Scanned over list slots (one compiled body regardless of the cap)."""
+    z0 = tree.centers[cfg.nlevels]
+
+    def body(acc, src):
+        bmask = src >= 0
+        srcc = jnp.where(bmask, src, 0)
+        pidx = idx[srcc]                                  # (nb, n_max)
+        pmask = (pidx >= 0) & bmask[:, None]
+        safe = jnp.where(pidx >= 0, pidx, 0)
+        pz = tree.z[safe]
+        pq = jnp.where(pmask, tree.q[safe], 0.0)
+        inv = jnp.where(pmask, 1.0 / (pz - z0[:, None]), 0.0)
+        w = rho[:, None] * inv
+        if cfg.kernel == "harmonic":
+            pw = pq * inv
+            updates = []
+            for _ in range(cfg.p + 1):
+                updates.append(pw.sum(axis=-1))
+                pw = pw * w
+        else:
+            logs = jnp.where(pmask, jnp.log(z0[:, None] - pz), 0.0)
+            updates = [(pq * logs).sum(axis=-1)]
+            pw = pq * w
+            for l in range(1, cfg.p + 1):
+                updates.append(-(pw.sum(axis=-1)) / l)
+                pw = pw * w
+        return acc + jnp.stack(updates, axis=-1), None
+
+    out, _ = jax.lax.scan(body, local, conn.p2l.T)
+    return out
+
+
+def downward(mult: list[jax.Array], tree: Tree, conn: Connectivity,
+             cfg: FmmConfig, rho=None) -> jax.Array:
+    """Local coefficients at the leaf level (incl. M2L, L2L, P2L)."""
+    p = cfg.p
+    cdt = mult[-1].dtype
+    m2l_mat = jnp.asarray(E.m2l_matrix(p), dtype=cfg.real_dtype)
+    if rho is None:
+        rho = effective_radii(tree, cfg)
+
+    local = jnp.zeros((1, p + 1), dtype=cdt)
+    for l in range(1, cfg.nlevels + 1):
+        local = l2l_level(local, tree, l, cfg, rho[l], rho[l - 1])
+        local = local + m2l_level(mult[l], conn.weak[l], tree.centers[l],
+                                  cfg, m2l_mat, rho[l])
+    if cfg.nlevels == 0:
+        local = local + m2l_level(mult[0], conn.weak[0], tree.centers[0],
+                                  cfg, m2l_mat, rho[0])
+    if cfg.use_p2l_m2p and cfg.nlevels > 0:
+        idx = jnp.asarray(leaf_particle_index(cfg))
+        local = p2l_sweep(local, tree, conn, cfg, idx, rho[cfg.nlevels])
+    return local
+
+
+# ---------------------------------------------------------------------------
+# evaluation phase
+# ---------------------------------------------------------------------------
+
+def l2p(local: jax.Array, tree: Tree, cfg: FmmConfig, rho=None) -> jax.Array:
+    """Evaluate leaf local expansions at the (sorted) particle positions."""
+    lid = jnp.asarray(leaf_ids(cfg))
+    if rho is None:
+        rho = effective_radii(tree, cfg)[cfg.nlevels]
+    t = (tree.z - tree.centers[cfg.nlevels][lid]) / rho[lid]
+    b = local[lid]                                        # (N, p+1)
+    acc = b[:, cfg.p]
+    for j in range(cfg.p - 1, -1, -1):
+        acc = acc * t + b[:, j]
+    return acc
+
+
+def m2p_sweep(phi: jax.Array, mult_leaf: jax.Array, tree: Tree,
+              conn: Connectivity, cfg: FmmConfig, rho=None) -> jax.Array:
+    """Evaluate source-box multipoles directly at target particles
+    (normalized: Horner in w = rho_src/(z - z0_src))."""
+    lid = jnp.asarray(leaf_ids(cfg))
+    z0 = tree.centers[cfg.nlevels]
+    if rho is None:
+        rho = effective_radii(tree, cfg)[cfg.nlevels]
+
+    def body(acc_phi, col):
+        src = col[lid]                                    # (N,)
+        mask = src >= 0
+        srcc = jnp.where(mask, src, 0)
+        a = mult_leaf[srcc]                               # (N, p+1)
+        dz = tree.z - z0[srcc]
+        w = jnp.where(mask, rho[srcc] / dz, 0.0)
+        acc = a[:, cfg.p]
+        for j in range(cfg.p - 1, 0, -1):
+            acc = acc * w + a[:, j]
+        acc = acc * w
+        if cfg.kernel == "log":
+            acc = acc + a[:, 0] * jnp.where(
+                mask, jnp.log(jnp.where(mask, dz, 1.0)), 0.0)
+        return acc_phi + jnp.where(mask, acc, 0.0), None
+
+    out, _ = jax.lax.scan(body, phi, conn.m2p.T)
+    return out
+
+
+def p2p_sweep(phi: jax.Array, tree: Tree, conn: Connectivity,
+              cfg: FmmConfig, idx: jax.Array) -> jax.Array:
+    """Near-field direct evaluation over the leaf P2P lists (Alg. 3.7).
+
+    Pure-jnp reference path; the Pallas kernel (kernels/p2p.py) implements
+    the same contraction with VMEM source tiles.
+    """
+    nb, n_max = idx.shape
+    tmask = idx >= 0
+    tidx = jnp.where(tmask, idx, 0)
+    tz = tree.z[tidx]                                     # (nb, n_max)
+
+    def body(acc, src):
+        bmask = src >= 0
+        srcc = jnp.where(bmask, src, 0)
+        sidx = idx[srcc]
+        smask = (sidx >= 0) & bmask[:, None]
+        siu = jnp.where(sidx >= 0, sidx, 0)
+        sz = tree.z[siu]
+        sq = jnp.where(smask, tree.q[siu], 0.0)
+        diff = sz[:, None, :] - tz[:, :, None]            # (nb, n_t, n_s)
+        ok = smask[:, None, :] & (diff != 0)
+        if cfg.kernel == "harmonic":
+            contrib = jnp.where(ok, sq[:, None, :]
+                                / jnp.where(ok, diff, 1.0), 0.0)
+        else:
+            contrib = jnp.where(ok, sq[:, None, :]
+                                * jnp.log(jnp.where(ok, -diff, 1.0)), 0.0)
+        return acc + contrib.sum(axis=-1), None
+
+    acc, _ = jax.lax.scan(body, jnp.zeros_like(tz), conn.p2p.T)
+    # scatter back to rank order (padded entries write a masked zero to rank 0)
+    flat = jnp.where(tmask.reshape(-1), acc.reshape(-1), 0.0)
+    return phi.at[tidx.reshape(-1)].add(flat)
+
+
+# ---------------------------------------------------------------------------
+# full pipeline
+# ---------------------------------------------------------------------------
+
+def fmm_build(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> FmmPlan:
+    tree = build_tree(z, q, cfg)
+    conn = build_connectivity(tree, cfg)
+    return FmmPlan(tree=tree, conn=conn)
+
+
+def fmm_evaluate(plan: FmmPlan, cfg: FmmConfig,
+                 p2p_impl=None, m2l_impl=None) -> jax.Array:
+    """Run upward/downward/evaluation on a built plan; returns sorted phi.
+
+    ``p2p_impl`` / ``m2l_impl`` optionally override the near-field and M2L
+    sweeps (used to swap in Pallas kernels).
+    """
+    tree, conn = plan.tree, plan.conn
+    mult = upward(tree, cfg)
+
+    if m2l_impl is None:
+        local = downward(mult, tree, conn, cfg)
+    else:
+        local = downward_with(mult, tree, conn, cfg, m2l_impl)
+
+    phi = l2p(local, tree, cfg)
+    if cfg.use_p2l_m2p:
+        phi = m2p_sweep(phi, mult[cfg.nlevels], tree, conn, cfg)
+
+    idx = jnp.asarray(leaf_particle_index(cfg))
+    if p2p_impl is None:
+        phi = p2p_sweep(phi, tree, conn, cfg, idx)
+    else:
+        phi = phi + p2p_impl(tree, conn, cfg, idx)
+    return phi
+
+
+def downward_with(mult, tree, conn, cfg, m2l_impl) -> jax.Array:
+    p = cfg.p
+    rho = effective_radii(tree, cfg)
+    local = jnp.zeros((1, p + 1), dtype=mult[-1].dtype)
+    for l in range(1, cfg.nlevels + 1):
+        local = l2l_level(local, tree, l, cfg, rho[l], rho[l - 1])
+        local = local + m2l_impl(mult[l], conn.weak[l], tree.centers[l],
+                                 cfg, rho[l])
+    if cfg.use_p2l_m2p and cfg.nlevels > 0:
+        idx = jnp.asarray(leaf_particle_index(cfg))
+        local = p2l_sweep(local, tree, conn, cfg, idx, rho[cfg.nlevels])
+    return local
+
+
+@functools.partial(jax.jit, static_argnums=2)
+def fmm_potential(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> jax.Array:
+    """Phi(z_i) = sum_{j != i} G(z_i, x_j) for all input points (eq. 1.1)."""
+    plan = fmm_build(z, q, cfg)
+    phi_sorted = fmm_evaluate(plan, cfg)
+    out = jnp.zeros_like(phi_sorted)
+    return out.at[plan.tree.perm].set(phi_sorted)
+
+
+def fmm_potential_with_stats(z, q, cfg):
+    """Non-jit variant returning (phi, connectivity stats)."""
+    from .connectivity import connectivity_stats
+    plan = fmm_build(z, q, cfg)
+    phi_sorted = fmm_evaluate(plan, cfg)
+    phi = jnp.zeros_like(phi_sorted).at[plan.tree.perm].set(phi_sorted)
+    return phi, connectivity_stats(jax.device_get(plan.conn))
+
+
+def fmm_potential_checked(z, q, cfg: FmmConfig, max_grow: int = 3):
+    """fmm_potential with interaction-list overflow validation.
+
+    The padded-list caps are static shapes; if the input distribution
+    overflows them the jit path would silently drop interactions. This
+    wrapper checks the overflow scalar (one cheap eager build) and regrows
+    the caps (x2, up to ``max_grow`` times) before evaluating. Production
+    deployments pin the grown config and stay on the jit path.
+    """
+    import dataclasses
+
+    for _ in range(max_grow + 1):
+        plan = fmm_build(z, q, cfg)
+        if int(jax.device_get(plan.conn.overflow)) == 0:
+            phi_sorted = fmm_evaluate(plan, cfg)
+            out = jnp.zeros_like(phi_sorted)
+            return out.at[plan.tree.perm].set(phi_sorted), cfg
+        cfg = dataclasses.replace(cfg, strong_cap=2 * cfg.strong_cap,
+                                  weak_cap=0)
+    raise RuntimeError(
+        f"interaction lists overflow even at strong_cap={cfg.strong_cap}")

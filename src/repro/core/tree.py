@@ -1,0 +1,106 @@
+"""Asymmetric adaptive FMM tree (paper §2, [7]).
+
+Boxes are split at the particle *median*, twice per level, along the most
+eccentric axis -> a perfectly balanced 4-ary pyramid. Because splits happen
+at exact ranks, box b at level l owns the contiguous rank-slice
+``[bounds[l][b], bounds[l][b+1])`` where the bounds depend only on (N, l):
+a *static memory layout*, which is the property the whole GPU (here: TPU)
+implementation is organized around.
+
+GPU-paper -> TPU adaptation (DESIGN.md §2): the paper picks an approximate
+pivot by sorting 32 samples per box (non-deterministic across runs due to
+atomicAdd); we instead sort each segment by the chosen coordinate with a
+single level-wide ``lexsort`` and cut at the exact median rank. This is
+deterministic and keeps every leaf within +-1 particle of perfectly
+balanced.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .config import FmmConfig, level_bounds, segment_ids, split_bounds
+
+
+class Tree(NamedTuple):
+    """Sorted particles + per-level box geometry. All shapes static."""
+
+    perm: jax.Array          # (N,) int32; sorted_field[i] corresponds to input index perm[i]
+    z: jax.Array             # (N,) complex, rank-sorted positions
+    q: jax.Array             # (N,) complex, rank-sorted strengths
+    centers: tuple[jax.Array, ...]   # level l: (4**l,) complex
+    radii: tuple[jax.Array, ...]     # level l: (4**l,) real
+
+
+def _seg_minmax(v: jax.Array, sid: jax.Array, nseg: int):
+    mn = jax.ops.segment_min(v, sid, num_segments=nseg, indices_are_sorted=True)
+    mx = jax.ops.segment_max(v, sid, num_segments=nseg, indices_are_sorted=True)
+    return mn, mx
+
+
+def build_tree(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> Tree:
+    """Sort particles into the static pyramid layout and compute geometry."""
+    rdt = cfg.real_dtype
+    cdt = cfg.complex_dtype
+    z = z.astype(cdt)
+    q = q.astype(cdt)
+    x = jnp.real(z).astype(rdt)
+    y = jnp.imag(z).astype(rdt)
+    perm = jnp.arange(cfg.n, dtype=jnp.int32)
+
+    sb = split_bounds(cfg.n, 2 * cfg.nlevels)
+    for s in range(2 * cfg.nlevels):
+        nseg = 2**s
+        sid = jnp.asarray(segment_ids(sb[s]))
+        xmn, xmx = _seg_minmax(x, sid, nseg)
+        ymn, ymx = _seg_minmax(y, sid, nseg)
+        # split along the wider (more eccentric) axis of each box
+        split_x = (xmx - xmn) >= (ymx - ymn)
+        coord = jnp.where(split_x[sid], x, y)
+        order = jnp.lexsort((coord, sid))
+        x, y, perm = x[order], y[order], perm[order]
+
+    z_sorted = (x + 1j * y).astype(cdt)
+    q_sorted = q[perm]
+
+    centers = []
+    radii = []
+    lb = level_bounds(cfg)
+    for l in range(cfg.nlevels + 1):
+        nseg = 4**l
+        sid = jnp.asarray(segment_ids(lb[l]))
+        xmn, xmx = _seg_minmax(x, sid, nseg)
+        ymn, ymx = _seg_minmax(y, sid, nseg)
+        cx = 0.5 * (xmn + xmx)
+        cy = 0.5 * (ymn + ymx)
+        centers.append((cx + 1j * cy).astype(cdt))
+        # shrink-to-fit half-diagonal (conservative expansion radius)
+        radii.append((0.5 * jnp.hypot(xmx - xmn, ymx - ymn)).astype(rdt))
+
+    return Tree(perm=perm, z=z_sorted, q=q_sorted,
+                centers=tuple(centers), radii=tuple(radii))
+
+
+def leaf_particle_index(cfg: FmmConfig) -> np.ndarray:
+    """(4**L, n_max) int32 gather map leaf-box -> particle ranks, -1 padded.
+
+    Purely static (depends only on N and nlevels) — this is the paper's
+    "static layout of memory" made literal: the map is a numpy constant
+    baked into the compiled program.
+    """
+    lb = level_bounds(cfg)[-1]
+    sizes = np.diff(lb)
+    n_max = int(sizes.max())
+    nbox = len(sizes)
+    idx = np.full((nbox, n_max), -1, dtype=np.int32)
+    for b in range(nbox):
+        idx[b, : sizes[b]] = np.arange(lb[b], lb[b + 1], dtype=np.int32)
+    return idx
+
+
+def leaf_ids(cfg: FmmConfig) -> np.ndarray:
+    """(N,) int32: leaf box owning each rank."""
+    return segment_ids(level_bounds(cfg)[-1])

@@ -1,0 +1,4 @@
+from .synthetic import (DataConfig, lm_batch, batch_specs, particles,
+                        Prefetcher)
+
+__all__ = ["DataConfig", "lm_batch", "batch_specs", "particles", "Prefetcher"]

@@ -1,0 +1,26 @@
+"""Pallas TPU kernels for the FMM hot spots (paper Table 5.1):
+
+  p2p/    near-field direct evaluation (43% of GPU runtime)
+  m2l/    multipole-to-local level sweep (11%)
+  l2p/    local evaluation (2%)
+  nbody/  direct summation baseline (Figs 5.5/5.6)
+
+Each subpackage ships <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), ops.py (jit'd wrapper with the FMM-pipeline contract) and ref.py
+(pure-jnp oracle). Validated with interpret=True on CPU; TPU is the target.
+The topological phase (sort 30%, connect 1%) intentionally has no kernel:
+sort/scan are XLA:TPU primitives (DESIGN.md §2).
+"""
+from . import common
+from .p2p import p2p_apply, p2p_pallas, p2p_ref
+from .m2l import m2l_level_apply, m2l_pallas, m2l_ref
+from .l2p import l2p_apply, l2p_pallas, l2p_ref
+from .nbody import nbody_direct, nbody_pallas, nbody_ref
+
+__all__ = [
+    "common",
+    "p2p_apply", "p2p_pallas", "p2p_ref",
+    "m2l_level_apply", "m2l_pallas", "m2l_ref",
+    "l2p_apply", "l2p_pallas", "l2p_ref",
+    "nbody_direct", "nbody_pallas", "nbody_ref",
+]

@@ -1,0 +1,63 @@
+"""Shared helpers for the Pallas TPU kernels.
+
+TPU has no native complex arithmetic in Pallas, so every kernel operates on
+separate real/imag f32 (or f64 in interpret mode) planes. Particle data is
+staged into *dense per-leaf-box* arrays of shape (nbox+1, n_pad): row `nbox`
+is an all-zero dummy row that -1 (masked) interaction-list entries are
+redirected to, so the kernels never branch on list validity — a zero-strength
+source contributes exactly zero. ``n_pad`` is the max leaf population rounded
+up to the 128-lane width.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode: True off-TPU (this container is CPU-only)."""
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def planes(z: jax.Array):
+    return jnp.real(z), jnp.imag(z)
+
+
+def dense_leaf_arrays(z: jax.Array, q: jax.Array, idx: np.ndarray,
+                      n_pad: int):
+    """Gather rank-sorted particles into (nbox+1, n_pad) dense planes.
+
+    Returns (zr, zi, qr, qi, tmask) where the trailing dummy row is zero and
+    padded slots carry q = 0 (and are additionally masked out of *target*
+    positions by ``tmask``).
+    """
+    nbox, n_max = idx.shape
+    pad_cols = n_pad - n_max
+    idxj = jnp.asarray(idx)
+    valid = idxj >= 0
+    safe = jnp.where(valid, idxj, 0)
+    zr = jnp.where(valid, jnp.real(z)[safe], 0.0)
+    zi = jnp.where(valid, jnp.imag(z)[safe], 0.0)
+    qr = jnp.where(valid, jnp.real(q)[safe], 0.0)
+    qi = jnp.where(valid, jnp.imag(q)[safe], 0.0)
+
+    def pack(a):
+        a = jnp.pad(a, ((0, 1), (0, pad_cols)))
+        return a
+
+    return pack(zr), pack(zi), pack(qr), pack(qi), jnp.pad(valid, ((0, 1), (0, pad_cols)))
+
+
+def scatter_from_leaves(values: jax.Array, idx: np.ndarray, n: int):
+    """Scatter (nbox, n_pad)->(n,) rank order; padded slots masked to rank 0."""
+    nbox, n_max = idx.shape
+    vals = values[:, :n_max].reshape(-1)
+    flat_idx = jnp.asarray(idx).reshape(-1)
+    ok = flat_idx >= 0
+    out = jnp.zeros((n,), values.dtype)
+    return out.at[jnp.where(ok, flat_idx, 0)].add(jnp.where(ok, vals, 0.0))

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: local evaluation (L2P) at leaf particles.
+
+One grid step per leaf box: the (1, P) local-coefficient block and the
+(1, n_pad) pre-centered particle tile live in VMEM; the p-term Horner
+recurrence runs on full vector registers with the coefficients read as
+scalars (static lane indices). The paper uses one thread per evaluation
+point with 64 threads/block; the TPU analogue is the 8x128 vector lane
+grid processing the whole box at once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _make_kernel(p: int):
+    def kernel(br_ref, bi_ref, tr_ref, ti_ref, outr, outi):
+        tr = tr_ref[...]
+        ti = ti_ref[...]
+        accr = jnp.full_like(tr, 0.0) + br_ref[0, p]
+        acci = jnp.full_like(ti, 0.0) + bi_ref[0, p]
+        for j in range(p - 1, -1, -1):
+            nr = accr * tr - acci * ti + br_ref[0, j]
+            ni = accr * ti + acci * tr + bi_ref[0, j]
+            accr, acci = nr, ni
+        outr[...] = accr
+        outi[...] = acci
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("p", "interpret"))
+def l2p_pallas(br, bi, tr, ti, *, p: int, interpret: bool = True):
+    """br/bi: (nbox, P) local planes; tr/ti: (nbox, n_pad) pre-centered
+    particle planes (z - z0). Returns (outr, outi): (nbox, n_pad)."""
+    nbox, P = br.shape
+    n_pad = tr.shape[1]
+
+    def row(b):
+        return (b, 0)
+
+    dt = tr.dtype
+    return pl.pallas_call(
+        _make_kernel(p),
+        grid=(nbox,),
+        in_specs=[
+            pl.BlockSpec((1, P), row),
+            pl.BlockSpec((1, P), row),
+            pl.BlockSpec((1, n_pad), row),
+            pl.BlockSpec((1, n_pad), row),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n_pad), row),
+            pl.BlockSpec((1, n_pad), row),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((nbox, n_pad), dt)] * 2,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(br, bi, tr, ti)

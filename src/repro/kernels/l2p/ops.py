@@ -1,0 +1,36 @@
+"""Jit'd wrapper wiring the L2P Pallas kernel into the FMM evaluation."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ...core.config import FmmConfig
+from ..common import (default_interpret, dense_leaf_arrays, round_up,
+                      scatter_from_leaves)
+from .l2p import l2p_pallas
+
+
+def l2p_apply(local, tree, cfg: FmmConfig, idx: np.ndarray,
+              interpret: bool | None = None):
+    """Evaluate leaf local expansions; returns (n,) complex in rank order."""
+    if interpret is None:
+        interpret = default_interpret()
+    idx = np.asarray(idx)
+    n_pad = round_up(idx.shape[1], 128)
+    rdt = cfg.real_dtype
+    zr, zi, _, _, valid = dense_leaf_arrays(tree.z, tree.q, idx, n_pad)
+    zr, zi, valid = zr[:-1], zi[:-1], valid[:-1]
+    c = tree.centers[cfg.nlevels]
+    from ...core.fmm import effective_radii
+    rho = effective_radii(tree, cfg)[cfg.nlevels]
+    tr = ((zr - jnp.real(c)[:, None]) / rho[:, None]).astype(rdt)
+    ti = ((zi - jnp.imag(c)[:, None]) / rho[:, None]).astype(rdt)
+
+    P = round_up(cfg.p + 1, 128)
+    pad = P - (cfg.p + 1)
+    br = jnp.pad(jnp.real(local), ((0, 0), (0, pad))).astype(rdt)
+    bi = jnp.pad(jnp.imag(local), ((0, 0), (0, pad))).astype(rdt)
+
+    outr, outi = l2p_pallas(br, bi, tr, ti, p=cfg.p, interpret=interpret)
+    out = jnp.where(valid, outr + 1j * outi, 0.0)
+    return scatter_from_leaves(out, idx, cfg.n)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the L2P kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def l2p_ref(br, bi, tr, ti, p: int):
+    b = br + 1j * bi                       # (nbox, P)
+    t = tr + 1j * ti                       # (nbox, n_pad)
+    acc = jnp.zeros_like(t) + b[:, p][:, None]
+    for j in range(p - 1, -1, -1):
+        acc = acc * t + b[:, j][:, None]
+    return jnp.real(acc), jnp.imag(acc)

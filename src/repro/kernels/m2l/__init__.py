@@ -1,0 +1,5 @@
+from .m2l import m2l_pallas
+from .ops import m2l_level_apply
+from .ref import m2l_ref
+
+__all__ = ["m2l_pallas", "m2l_level_apply", "m2l_ref"]

@@ -1,0 +1,50 @@
+"""Jit'd wrapper wiring the M2L Pallas kernel into the FMM downward pass."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from ...core import expansions as E
+from ...core.config import FmmConfig
+from ..common import default_interpret, round_up
+from .m2l import m2l_pallas
+
+
+def m2l_level_apply(mult, weak, centers, cfg: FmmConfig, rho,
+                    interpret: bool | None = None):
+    """Drop-in ``m2l_impl`` for ``repro.core.fmm.downward_with``.
+
+    mult: (nbox, p+1) complex *radius-normalized* coefficients; weak:
+    (nbox, W) int32; centers/rho: (nbox,). The pre/post scale factors
+    (rho_s/r and -rho_t/r — bounded ratios, see expansions.py) are computed
+    here as complex planes; the kernel runs the power recurrences on them.
+    Returns (nbox, p+1) complex normalized local contributions.
+    """
+    if cfg.kernel != "harmonic":
+        raise NotImplementedError("Pallas M2L implements the harmonic kernel")
+    if interpret is None:
+        interpret = default_interpret()
+    nbox, W = weak.shape
+    P = round_up(cfg.p + 1, 128)
+    rdt = cfg.real_dtype
+
+    pad = P - (cfg.p + 1)
+    ar = jnp.pad(jnp.real(mult), ((0, 1), (0, pad))).astype(rdt)
+    ai = jnp.pad(jnp.imag(mult), ((0, 1), (0, pad))).astype(rdt)
+
+    mask = weak >= 0
+    src = jnp.where(mask, weak, 0)
+    r = jnp.where(mask, centers[:, None] - centers[src], 1.0)
+    pre = jnp.where(mask, rho[src], 0.0) / r             # rho_s / r
+    post = -rho[:, None] / r                             # -rho_t / r
+
+    h = np.zeros((P, P))
+    h[: cfg.p + 1, : cfg.p + 1] = E.m2l_matrix(cfg.p)
+    ht = jnp.asarray(h.T, dtype=rdt)
+
+    outr, outi = m2l_pallas(
+        weak, ar, ai,
+        jnp.real(pre).astype(rdt), jnp.imag(pre).astype(rdt),
+        jnp.real(post).astype(rdt), jnp.imag(post).astype(rdt),
+        ht, p=cfg.p, interpret=interpret)
+    return (outr + 1j * outi)[:, : cfg.p + 1].astype(mult.dtype)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the M2L kernel (same dense-plane contract)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def m2l_ref(weak, ar, ai, prer, prei, postr, posti, ht):
+    nbox, W = weak.shape
+    P = ar.shape[1]
+    dummy = ar.shape[0] - 1
+    src = jnp.where(weak >= 0, weak, dummy)
+    a = (ar + 1j * ai)[src]                  # (nbox, W, P)
+    k = jnp.arange(P)
+    pre = (prer + 1j * prei)[..., None] ** k     # (rho_s/r)^k
+    post = (postr + 1j * posti)[..., None] ** k  # (-rho_t/r)^l
+    b_hat = jnp.einsum("bwk,kl->bwl", a * pre, ht.astype(a.dtype))
+    out = (b_hat * post).sum(axis=1)
+    return jnp.real(out), jnp.imag(out)

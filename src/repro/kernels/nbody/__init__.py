@@ -1,0 +1,5 @@
+from .nbody import nbody_pallas
+from .ops import nbody_direct
+from .ref import nbody_ref
+
+__all__ = ["nbody_pallas", "nbody_direct", "nbody_ref"]

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the direct N-body kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def nbody_ref(tzr, tzi, szr, szi, sqr, sqi):
+    tz = tzr + 1j * tzi
+    sz = szr + 1j * szi
+    sq = sqr + 1j * sqi
+    diff = sz[None, :] - tz[:, None]
+    ok = diff != 0
+    phi = jnp.where(ok, sq[None, :] / jnp.where(ok, diff, 1.0), 0.0).sum(-1)
+    return jnp.real(phi), jnp.imag(phi)

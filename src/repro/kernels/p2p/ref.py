@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the P2P kernel (harmonic kernel, dense leaf layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def p2p_ref(lists, tzr, tzi, szr, szi, sqr, sqi):
+    """Same contract as p2p_pallas; returns (outr, outi) of (nbox, n_pad)."""
+    nbox, S = lists.shape
+    dummy = szr.shape[0] - 1
+    lists = jnp.where(lists >= 0, lists, dummy)
+    tz = tzr + 1j * tzi                      # (nbox, n_pad)
+    sz = (szr + 1j * szi)[lists]             # (nbox, S, n_pad)
+    sq = (sqr + 1j * sqi)[lists]
+    diff = sz[:, None, :, :] - tz[:, :, None, None]   # (nbox, n_t, S, n_s)
+    ok = diff != 0
+    c = jnp.where(ok, sq[:, None, :, :] / jnp.where(ok, diff, 1.0), 0.0)
+    phi = c.sum(axis=(2, 3))
+    return jnp.real(phi), jnp.imag(phi)

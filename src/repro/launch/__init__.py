@@ -1,0 +1,10 @@
+"""Launchers: mesh definitions, multi-pod dry-run, train/serve entry points.
+
+NOTE: do not import .dryrun from here — it sets XLA_FLAGS at import time
+(512 host devices) and must only be imported as __main__.
+"""
+from .mesh import make_production_mesh, make_test_mesh, mesh_info
+from .runtime import FailureInjector, StragglerMonitor, train_loop
+
+__all__ = ["make_production_mesh", "make_test_mesh", "mesh_info",
+           "FailureInjector", "StragglerMonitor", "train_loop"]

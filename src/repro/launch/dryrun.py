@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell and
+extract the roofline terms from the compiled artifact.
+
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        [--arch dbrx-132b ...] [--shape train_4k ...] \
+        [--mesh pod multipod] [--out artifacts/dryrun] [--force]
+
+For each cell this:
+  1. builds the production mesh (16x16 "data","model"; 2x16x16 +"pod"),
+  2. ``jax.jit(step).lower(*abstract_args)`` (ShapeDtypeStruct — zero
+     allocation) and ``.compile()`` — sharding or memory incoherence fails
+     HERE, which is the point of the exercise,
+  3. prints ``compiled.memory_analysis()`` / ``cost_analysis()``,
+  4. parses the optimized HLO for collective bytes,
+  5. writes one JSON artifact per cell (resumable: existing cells skip).
+
+The per-device HBM budget check against the 16 GiB of a v5e chip is
+reported in the artifact (argument+output+temp bytes).
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import numpy as np
+
+HW = {
+    "peak_flops_bf16": 197e12,   # per chip, TPU v5e
+    "hbm_bw": 819e9,             # bytes/s per chip
+    "ici_bw": 50e9,              # bytes/s per link
+    "hbm_bytes": 16 * 1024**3,
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+    "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[-a-z]*\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    out: dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        kind = m.group(2)
+        out[kind] = out.get(kind, 0) + shape_bytes(m.group(1))
+    out["total"] = sum(out.values())
+    return out
+
+
+def memory_analysis_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        ma = None
+    if ma is None:
+        return {}
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def cost_analysis_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in dict(ca).items()
+            if isinstance(v, (int, float)) and (
+                "flops" in k or "bytes" in k or "utilization" not in k)}
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, out_dir: str,
+             force: bool = False) -> dict:
+    import jax
+    from ..configs import SHAPES, applicable, get_config, get_opt
+    from .mesh import make_production_mesh
+    from .steps import build_cell
+
+    os.makedirs(out_dir, exist_ok=True)
+    cell_id = f"{arch}__{shape_name}__{mesh_name}"
+    path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape_name)
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+    }
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"[dryrun] {cell_id}: SKIPPED ({reason})")
+        return record
+
+    multi_pod = mesh_name == "multipod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(mesh.devices.size)
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            cell = build_cell(cfg, get_opt(arch), shape, mesh, multi_pod)
+            lowered = cell.jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = memory_analysis_dict(compiled)
+            cost = cost_analysis_dict(compiled)
+            hlo = compiled.as_text()
+            from .hlo_analysis import collective_bytes_weighted
+            coll = collective_bytes_weighted(hlo)
+            coll_once = collective_bytes(hlo)
+    except Exception as e:
+        record.update(status="failed", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"[dryrun] {cell_id}: FAILED {type(e).__name__}: {e}")
+        return record
+
+    flops = cost.get("flops", 0.0)
+    bytes_acc = cost.get("bytes accessed", 0.0)
+    terms = {
+        "compute_s": flops / HW["peak_flops_bf16"],
+        "memory_s": bytes_acc / HW["hbm_bw"],
+        "collective_s": coll.get("total", 0.0) / HW["ici_bw"],
+    }
+    dominant = max(terms, key=terms.get)
+    # useful model flops (per device): 6ND train / 2ND forward
+    tokens = shape.global_batch * (shape.seq if cell.kind != "decode" else 1)
+    nd_const = 6 if cell.kind == "train" else 2
+    model_flops = nd_const * record["active_params"] * tokens / n_chips
+    record.update(
+        status="ok", kind=cell.kind, n_chips=n_chips,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory=mem, cost=cost, collectives=coll,
+        collectives_once=coll_once,
+        roofline_terms_s=terms, dominant=dominant,
+        model_flops_per_chip=model_flops,
+        useful_flops_fraction=(model_flops / flops) if flops else None,
+        hbm_used=sum(mem.get(k, 0) for k in
+                     ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes")),
+        hbm_budget=HW["hbm_bytes"],
+    )
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[dryrun] {cell_id}: OK dominant={dominant} "
+          f"terms={{compute {terms['compute_s']:.3e}s, "
+          f"memory {terms['memory_s']:.3e}s, "
+          f"coll {terms['collective_s']:.3e}s}} "
+          f"hbm={record['hbm_used']/2**30:.2f}GiB "
+          f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    sys.stdout.flush()
+    return record
+
+
+def run_fmm_cell(shape_name: str, mesh_name: str, out_dir: str,
+                 force: bool = False) -> dict:
+    """The paper's own config: fmm_potential sharded over the full mesh."""
+    import jax
+    import jax.numpy as jnp
+    from ..configs.fmm2d import FMM_SHAPES, fmm_config
+    from ..core.fmm import fmm_potential
+    from .mesh import make_production_mesh
+
+    os.makedirs(out_dir, exist_ok=True)
+    cell_id = f"fmm2d__{shape_name}__{mesh_name}"
+    path = os.path.join(out_dir, cell_id + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    n = FMM_SHAPES[shape_name]
+    cfg = fmm_config(n)
+    multi_pod = mesh_name == "multipod"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from jax.sharding import NamedSharding, PartitionSpec as PS
+    flat = PS(tuple(mesh.axis_names))
+    record: dict = {"arch": "fmm2d", "shape": shape_name, "mesh": mesh_name,
+                    "n": n, "nlevels": cfg.nlevels, "p": cfg.p}
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            fn = jax.jit(lambda z, q: fmm_potential(z, q, cfg),
+                         in_shardings=(NamedSharding(mesh, flat),) * 2,
+                         out_shardings=NamedSharding(mesh, flat))
+            az = jax.ShapeDtypeStruct((n,), jnp.complex64)
+            aq = jax.ShapeDtypeStruct((n,), jnp.complex64)
+            lowered = fn.lower(az, aq)
+            compiled = lowered.compile()
+            mem = memory_analysis_dict(compiled)
+            cost = cost_analysis_dict(compiled)
+            from .hlo_analysis import collective_bytes_weighted
+            coll = collective_bytes_weighted(compiled.as_text())
+    except Exception as e:
+        record.update(status="failed", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+        print(f"[dryrun] {cell_id}: FAILED {type(e).__name__}: {e}")
+        return record
+    flops = cost.get("flops", 0.0)
+    terms = {
+        "compute_s": flops / HW["peak_flops_bf16"],
+        "memory_s": cost.get("bytes accessed", 0.0) / HW["hbm_bw"],
+        "collective_s": coll.get("total", 0.0) / HW["ici_bw"],
+    }
+    record.update(status="ok", kind="fmm", n_chips=int(mesh.devices.size),
+                  compile_s=round(time.time() - t0, 1), memory=mem,
+                  cost=cost, collectives=coll, roofline_terms_s=terms,
+                  dominant=max(terms, key=terms.get))
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    print(f"[dryrun] {cell_id}: OK dominant={record['dominant']}")
+    return record
+
+
+def main():
+    from ..configs import ARCH_NAMES, SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=list(ARCH_NAMES) + ["fmm2d"])
+    ap.add_argument("--shape", nargs="*", default=None)
+    ap.add_argument("--mesh", nargs="*", default=["pod", "multipod"],
+                    choices=["pod", "multipod"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    results = []
+    for arch in args.arch:
+        if arch == "fmm2d":
+            from ..configs.fmm2d import FMM_SHAPES
+            shapes = args.shape or list(FMM_SHAPES)
+            for sh in shapes:
+                if sh not in FMM_SHAPES:
+                    continue
+                for mesh_name in args.mesh:
+                    results.append(run_fmm_cell(sh, mesh_name, args.out,
+                                                args.force))
+            continue
+        shapes = args.shape or list(SHAPES)
+        for sh in shapes:
+            for mesh_name in args.mesh:
+                results.append(run_cell(arch, sh, mesh_name, args.out,
+                                        args.force))
+    n_ok = sum(r.get("status") == "ok" for r in results)
+    n_skip = sum(r.get("status") == "skipped" for r in results)
+    n_fail = sum(r.get("status") == "failed" for r in results)
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_fail} failed "
+          f"of {len(results)}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

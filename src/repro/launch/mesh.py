@@ -1,0 +1,32 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS for 512 host devices before any jax initialization, and smoke
+tests see the single real device.
+
+Topology: TPU v5e pods of 256 chips as a 16x16 ("data", "model") torus;
+multi-pod adds a leading "pod" axis over the (slower) inter-pod links —
+collectives we place on "pod" are the ones gradient compression targets.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for unit tests running with forced host devices."""
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_info(mesh) -> dict:
+    return {
+        "axes": dict(zip(mesh.axis_names, mesh.devices.shape)),
+        "n_devices": int(mesh.devices.size),
+    }

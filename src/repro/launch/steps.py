@@ -1,0 +1,276 @@
+"""Sharded step functions per (arch x shape): train / prefill / decode.
+
+All sharding decisions live here:
+
+  params      logical axes -> Rules table (TP/EP on "model", FSDP over the
+              data axes for the "embed" axis)
+  activations batch over (pod, data); residual stream sequence-sharded over
+              "model" between blocks (Megatron-style sequence parallelism —
+              without it the 18k-wide archs cannot hold their per-layer
+              residuals)
+  KV cache    sequence axis over "model" (uniform for any n_kv; distributed
+              flash-decode emerges from GSPMD's partitioned softmax
+              reductions), batch over data axes when divisible
+  optimizer   mirrors the params (factored Adafactor rows/cols drop the
+              corresponding spec entries)
+
+Gradient accumulation: the global batch is split into microbatches scanned
+inside one jit (grads accumulated in f32), so arbitrary global batches fit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from ..data.synthetic import batch_specs
+from ..models import lm
+from ..models.config import ModelConfig
+from ..optim import OptConfig, apply_updates, init_opt_state
+from ..parallel.sharding import Rules, dp_axes
+
+
+# ---------------------------------------------------------------------------
+# sharding trees
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, rules: Rules):
+    return lm.make_param_pspecs(cfg, rules.table())
+
+
+def opt_specs(cfg: ModelConfig, oc: OptConfig, rules: Rules):
+    """Optimizer-state PartitionSpecs mirroring the parameter specs."""
+    pspecs = param_specs(cfg, rules)
+    aparams = lm.make_abstract_params(cfg)
+    if oc.name == "adamw":
+        return {"m": pspecs, "v": pspecs}
+
+    def vrow(spec, p):
+        from ..optim.optim import _factored
+        return PS(*spec[:-1]) if _factored(p.shape, oc.factored_min_dim) \
+            else spec
+
+    def vcol(spec, p):
+        from ..optim.optim import _factored
+        if _factored(p.shape, oc.factored_min_dim):
+            return PS(*(tuple(spec)[:-2] + tuple(spec)[-1:]))
+        return PS(*((None,) * p.ndim))
+
+    return {
+        "vr": jax.tree.map(vrow, pspecs, aparams),
+        "vc": jax.tree.map(vcol, pspecs, aparams),
+        "m": pspecs,
+    }
+
+
+def _dp_if_divisible(n: int, mesh, multi_pod: bool):
+    axes = dp_axes(multi_pod)
+    size = int(np.prod([mesh.shape[a] for a in axes]))
+    return axes if n % size == 0 else None
+
+
+def batch_pspecs(cfg: ModelConfig, batch: int, mesh, multi_pod: bool):
+    dp = _dp_if_divisible(batch, mesh, multi_pod)
+    spec = {"tokens": PS(dp, None), "labels": PS(dp, None)}
+    if cfg.arch == "encdec":
+        spec["audio"] = PS(dp, None, None)
+    if cfg.arch == "vlm":
+        spec["img"] = PS(dp, None, None)
+    return spec
+
+
+def cache_pspecs(cfg: ModelConfig, batch: int, mesh, multi_pod: bool,
+                 max_len: int = 0):
+    """KV-cache specs: seq over "model", batch over data axes."""
+    dp = _dp_if_divisible(batch, mesh, multi_pod)
+    tp = int(mesh.shape["model"])
+    seq_ax = "model" if (max_len == 0 or max_len % tp == 0) else None
+    cross_ax = "model" if cfg.n_audio_ctx % tp == 0 else None
+    spec: dict[str, Any] = {}
+    for i, (mixer, ffn) in enumerate(cfg.group):
+        e = {}
+        if mixer == "attn":
+            e["k"] = PS(None, dp, seq_ax, None, None)
+            e["v"] = PS(None, dp, seq_ax, None, None)
+        elif mixer == "mamba":
+            e["conv"] = PS(None, dp, None, "model")
+            e["h"] = PS(None, dp, "model", None)
+        elif mixer == "rwkv":
+            e["prev_tm"] = PS(None, dp, None, None)
+            e["s"] = PS(None, dp, "model", None, None)
+        if ffn == "rwkv_cm":
+            e["prev_cm"] = PS(None, dp, None, None)
+        if cfg.arch == "encdec":
+            e["ck"] = PS(None, dp, cross_ax, None, None)
+            e["cv"] = PS(None, dp, cross_ax, None, None)
+        spec[f"l{i}"] = e
+    return spec
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, PS))
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (dry-run: ShapeDtypeStruct only, no allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_train_state(cfg: ModelConfig, oc: OptConfig):
+    aparams = lm.make_abstract_params(cfg)
+    astate = jax.eval_shape(lambda p: init_opt_state(p, oc), aparams)
+    return {"params": aparams, "opt": astate,
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, batch, max_len))
+
+
+def train_state_pspecs(cfg: ModelConfig, oc: OptConfig, rules: Rules):
+    return {"params": param_specs(cfg, rules),
+            "opt": opt_specs(cfg, oc, rules),
+            "step": PS()}
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, oc: OptConfig, *, num_micro: int = 1,
+                    act_seq_shard: bool = True):
+    """(state, batch) -> (state, metrics); microbatch scan inside."""
+
+    act_spec = PS(None, "model", None) if act_seq_shard else None
+
+    def loss_fn(params, batch):
+        return lm.forward_loss(params, batch, cfg)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def micro_slice(x):
+            gb = x.shape[0]
+            return x.reshape((num_micro, gb // num_micro) + x.shape[1:])
+
+        mbatches = jax.tree.map(micro_slice, batch)
+        gz = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            gacc, lacc, lb, z = carry
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            gacc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                gacc, grads)
+            return (gacc, lacc + loss,
+                    lb + metrics.get("load_balance", 0.0),
+                    z + metrics.get("router_z", 0.0)), None
+
+        z0 = jnp.zeros((), jnp.float32)
+        (gacc, loss, lb, z), _ = jax.lax.scan(
+            body, (gz, z0, z0, z0), mbatches)
+        grads = jax.tree.map(lambda g: g / num_micro, gacc)
+        new_params, new_opt, stats = apply_updates(
+            params, grads, state["opt"], state["step"], oc)
+        metrics = {"loss": loss / num_micro,
+                   "load_balance": lb / num_micro,
+                   "router_z": z / num_micro, **stats}
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_prefill(cfg: ModelConfig, max_len: int):
+    def prefill_step(params, batch):
+        return lm.prefill(params, batch, cfg, max_len)
+    return prefill_step
+
+
+def make_decode(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, cur_index):
+        return lm.decode_step(params, cache, tokens, cur_index, cfg)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# jit + shardings assembly for one (arch, shape, mesh) cell
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LoweredCell:
+    kind: str
+    jitted: Any
+    args: tuple          # abstract or concrete args matching jitted
+
+
+def build_cell(cfg: ModelConfig, oc: OptConfig, shape, mesh,
+               multi_pod: bool, *, micro_tokens: int = 8192):
+    """Assemble the jit'd step + abstract inputs for a dry-run cell."""
+    rules = Rules(multi_pod=multi_pod, fsdp=True)
+    kind = shape.kind
+    B, S = shape.global_batch, shape.seq
+
+    if kind == "train":
+        dp = int(np.prod([mesh.shape[a] for a in dp_axes(multi_pod)]))
+        per_replica = max(1, B // dp)
+        # microbatches: cap per-replica micro tokens
+        mt = max(1, micro_tokens // S)
+        num_micro = max(1, per_replica // mt)
+        step_fn = make_train_step(cfg, oc, num_micro=num_micro)
+        state = abstract_train_state(cfg, oc)
+        sspec = train_state_pspecs(cfg, oc, rules)
+        bspec = batch_pspecs(cfg, B, mesh, multi_pod)
+        babs = batch_specs(cfg, B, S)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(to_shardings(mesh, sspec),
+                          to_shardings(mesh, bspec)),
+            out_shardings=(to_shardings(mesh, sspec), None),
+            donate_argnums=(0,),
+        )
+        return LoweredCell("train", jitted, (state, babs))
+
+    pspec = param_specs(cfg, rules)
+    aparams = lm.make_abstract_params(cfg)
+
+    if kind == "prefill":
+        step_fn = make_prefill(cfg, S)
+        bspec = batch_pspecs(cfg, B, mesh, multi_pod)
+        cspec = cache_pspecs(cfg, B, mesh, multi_pod, S)
+        babs = batch_specs(cfg, B, S)
+        babs.pop("labels")
+        bspec = {k: v for k, v in bspec.items() if k in babs}
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(to_shardings(mesh, pspec),
+                          to_shardings(mesh, bspec)),
+            out_shardings=(to_shardings(mesh, cspec), None),
+        )
+        return LoweredCell("prefill", jitted, (aparams, babs))
+
+    # decode: one token against a full cache of length S
+    step_fn = make_decode(cfg)
+    cspec = cache_pspecs(cfg, B, mesh, multi_pod, S)
+    cache = abstract_cache(cfg, B, S)
+    dp = _dp_if_divisible(B, mesh, multi_pod)
+    toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(to_shardings(mesh, pspec),
+                      to_shardings(mesh, cspec),
+                      NamedSharding(mesh, PS(dp, None)),
+                      NamedSharding(mesh, PS())),
+        out_shardings=(NamedSharding(mesh, PS(dp, "model")),
+                       to_shardings(mesh, cspec)),
+        donate_argnums=(1,),
+    )
+    return LoweredCell("decode", jitted, (aparams, cache, toks, idx))

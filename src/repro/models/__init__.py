@@ -1,0 +1,12 @@
+"""Model zoo substrate: one block grammar covering dense / MoE / hybrid /
+attention-free / enc-dec / VLM architectures (see configs/)."""
+from .config import ModelConfig
+from .lm import (decode_step, forward_hidden, forward_loss, init_cache,
+                 make_abstract_params, make_param_pspecs, make_params,
+                 model_defs, prefill)
+
+__all__ = [
+    "ModelConfig", "model_defs", "make_params", "make_abstract_params",
+    "make_param_pspecs", "forward_loss", "forward_hidden", "prefill",
+    "decode_step", "init_cache",
+]

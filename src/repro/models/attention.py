@@ -1,0 +1,243 @@
+"""Attention: GQA/MHA/MQA with RoPE, qk-norm, optional biases.
+
+Training/prefill path is a blockwise (flash-style) online-softmax over KV
+chunks — pure jnp, so GSPMD can shard it (heads on "model", batch on data
+axes, and for decode the KV sequence axis on "model" with the two softmax
+reductions turning into all-reduces). Scores/accumulators are f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, norm_defs, apply_norm, rms_norm, rope
+
+NEG = -1e30
+
+
+def attn_defs(cfg, cross: bool = False):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.d_head
+    defs = {
+        "wq": ParamDef((d, h * dh), ("embed", "heads")),
+        "wk": ParamDef((d, kv * dh), ("embed", "kv")),
+        "wv": ParamDef((d, kv * dh), ("embed", "kv")),
+        "wo": ParamDef((h * dh, d), ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h * dh,), ("heads",), "zeros")
+        defs["bk"] = ParamDef((kv * dh,), ("kv",), "zeros")
+        defs["bv"] = ParamDef((kv * dh,), ("kv",), "zeros")
+    if cfg.qk_norm:
+        defs["q_norm"] = norm_defs(dh, "rms")
+        defs["k_norm"] = norm_defs(dh, "rms")
+    return defs
+
+
+def _project_qkv(p, x, x_kv, cfg, q_positions, kv_positions):
+    from jax.sharding import PartitionSpec as PS
+    from ..parallel.sharding import maybe_shard
+
+    B, S, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x_kv, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x_kv, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    # keep heads tensor-parallel through the attention body: without these
+    # constraints GSPMD loses the "model" sharding at the GQA reshape and
+    # replicates the f32 score tensors (measured 83 GiB/device -> OOM).
+    from ..parallel.sharding import ACT_DP
+    q = maybe_shard(q, PS(ACT_DP, None, "model"))
+    k = maybe_shard(k, PS(ACT_DP, None, "model"))
+    v = maybe_shard(v, PS(ACT_DP, None, "model"))
+    q = q.reshape(B, S, h, dh)
+    k = k.reshape(B, x_kv.shape[1], kv, dh)
+    v = v.reshape(B, x_kv.shape[1], kv, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"])
+        k = rms_norm(k, p["k_norm"]["scale"])
+    if cfg.pos == "rope" and q_positions is not None:
+        qr, _ = rope(q, q, q_positions, cfg.rope_theta, dh)
+        _, kr = rope(k, k, kv_positions, cfg.rope_theta, dh)
+        q, k = qr, kr
+    return q, k, v
+
+
+def blockwise_attention(q, k, v, q_pos, k_pos, causal: bool,
+                        chunk_k: int = 1024):
+    """Online-softmax attention. q: (B,S,H,dh); k/v: (B,T,KV,dh).
+
+    q_pos/k_pos: (S,)/(T,) absolute positions for the causal mask.
+    """
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qf = q.reshape(B, S, KV, g, dh).astype(jnp.float32) * (dh ** -0.5)
+    chunk_k = min(chunk_k, T)
+    while T % chunk_k:           # largest divisor <= requested chunk
+        chunk_k -= 1
+    nck = T // chunk_k
+    ks = k.reshape(B, nck, chunk_k, KV, dh).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nck, chunk_k, KV, dh).transpose(1, 0, 2, 3, 4)
+    kp = k_pos.reshape(nck, chunk_k)
+
+    m0 = jnp.full((B, S, KV, g), NEG, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, g), jnp.float32)
+    a0 = jnp.zeros((B, S, KV, g, dh), jnp.float32)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kc, vc, kpc = blk
+        s = jnp.einsum("bsKgd,bcKd->bsKgc", qf, kc.astype(jnp.float32))
+        if causal:
+            mask = (kpc[None, :] <= q_pos[:, None])      # (S, c)
+            mask = mask[None, :, None, None, :]          # (1,S,1,1,c)
+            s = jnp.where(mask, s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        if causal:
+            p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bsKgc,bcKd->bsKgd", p, vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kp))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def dense_attention(q, k, v, q_pos, k_pos, causal: bool):
+    """Materialized-scores attention (short sequences / training).
+
+    Scores are constrained head-sharded over "model" — the classic
+    Megatron-TP layout; under per-block remat the (B,H,S,T) tensors are
+    transient, and GSPMD's partitioned softmax needs no while-carry
+    sharding inference (which is what breaks the blockwise path's
+    backward, see DESIGN.md §Perf notes).
+    """
+    from jax.sharding import PartitionSpec as PS
+    from ..parallel.sharding import ACT_DP, maybe_shard
+
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qf = q.reshape(B, S, KV, g, dh).astype(jnp.float32) * (dh ** -0.5)
+    s = jnp.einsum("bsKgd,btKd->bKgst", qf, k.astype(jnp.float32))
+    # shard the f32 score tensor over "model": merged (KV*g) head dim when
+    # it divides TP (most archs), else the q-sequence dim (arctic's 56
+    # heads, whisper's 12)
+    mesh = jax.sharding.get_abstract_mesh()
+    tp = dict(zip(mesh.axis_names, mesh.axis_sizes)).get("model", 1) \
+        if mesh is not None and not mesh.empty else 1
+    if H % max(tp, 1) == 0:
+        s = maybe_shard(s.reshape(B, H, S, T),
+                        PS(ACT_DP, "model", None, None)).reshape(
+                            B, KV, g, S, T)
+    else:
+        s = maybe_shard(s, PS(ACT_DP, None, None, "model", None))
+    if causal:
+        mask = k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bKgst,btKd->bsKgd", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+# sequences longer than this use the blockwise online-softmax path
+DENSE_MAX_SEQ = 8192
+
+
+def self_attention(p, x, cfg, positions, causal: bool = True,
+                   chunk_k: int | None = None):
+    """Full self-attention over x (training / prefill)."""
+    q, k, v = _project_qkv(p, x, x, cfg, positions, positions)
+    if x.shape[1] <= DENSE_MAX_SEQ:
+        out = dense_attention(q, k, v, positions, positions, causal)
+    else:
+        out = blockwise_attention(q, k, v, positions, positions, causal,
+                                  chunk_k or cfg.attn_chunk)
+    B, S = x.shape[:2]
+    return jnp.einsum("bsh,hd->bsd",
+                      out.reshape(B, S, cfg.n_heads * cfg.d_head), p["wo"])
+
+
+def self_attention_kv(p, x, cfg, positions, causal: bool = True,
+                      cache_len: int = 0, chunk_k: int | None = None):
+    """self_attention that also returns (k, v) padded to cache_len."""
+    q, k, v = _project_qkv(p, x, x, cfg, positions, positions)
+    out = blockwise_attention(q, k, v, positions, positions, causal,
+                              chunk_k or cfg.attn_chunk)
+    B, S = x.shape[:2]
+    y = jnp.einsum("bsh,hd->bsd",
+                   out.reshape(B, S, cfg.n_heads * cfg.d_head), p["wo"])
+    pad = cache_len - S
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return y, (kc, vc)
+
+
+def cross_attention(p, x, enc, cfg, chunk_k: int | None = None):
+    """Decoder->encoder cross attention (no causal mask, no rope)."""
+    B, S, _ = x.shape
+    T = enc.shape[1]
+    q, k, v = _project_qkv(p, x, enc, cfg, None, None)
+    pos_q = jnp.arange(S)
+    pos_k = jnp.arange(T)
+    out = blockwise_attention(q, k, v, pos_q, pos_k, False,
+                              min(chunk_k or cfg.attn_chunk, T))
+    return jnp.einsum("bsh,hd->bsd",
+                      out.reshape(B, S, cfg.n_heads * cfg.d_head), p["wo"])
+
+
+def decode_self_attention(p, x, cache_k, cache_v, cur_index, cfg):
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, T, KV, dh) — new K/V written at cur_index.
+    Returns (out, new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    T = cache_k.shape[1]
+    cur = jnp.asarray(cur_index, jnp.int32)
+    zero = jnp.zeros((), jnp.int32)
+    pos = jnp.full((1,), cur, jnp.int32)
+    q, k, v = _project_qkv(p, x, x, cfg, pos, pos)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (zero, cur, zero, zero))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (zero, cur, zero, zero))
+
+    KV, dh = cfg.n_kv, cfg.d_head
+    g = cfg.n_heads // KV
+    qf = q.reshape(B, KV, g, dh).astype(jnp.float32) * (dh ** -0.5)
+    kf = cache_k.astype(jnp.float32)
+    s = jnp.einsum("bKgd,btKd->bKgt", qf, kf)
+    mask = jnp.arange(T)[None, None, None, :] <= cur_index
+    s = jnp.where(mask, s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bKgt,btKd->bKgd", w, cache_v.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.n_heads * dh).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), cache_k, cache_v
+
+
+def decode_cross_attention(p, x, enc_k, enc_v, cfg):
+    """One-token cross attention against precomputed encoder K/V."""
+    B = x.shape[0]
+    KV, dh = cfg.n_kv, cfg.d_head
+    g = cfg.n_heads // KV
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(B, KV, g, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"])
+    qf = q.astype(jnp.float32) * (dh ** -0.5)
+    s = jnp.einsum("bKgd,btKd->bKgt", qf, enc_k.astype(jnp.float32))
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bKgt,btKd->bKgd", w, enc_v.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.n_heads * dh).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])

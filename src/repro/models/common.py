@@ -1,0 +1,147 @@
+"""Shared model-definition machinery.
+
+Parameters are plain nested dicts of jax arrays. Every parameter is declared
+through ``ParamDef`` (shape + logical axes + initializer), which gives us,
+from one source of truth:
+
+  - ``init_params``      real initialization (PRNG-split per leaf)
+  - ``abstract_params``  ShapeDtypeStruct tree (dry-run: no allocation)
+  - ``param_pspecs``     PartitionSpec tree via logical->mesh rules
+
+Logical axes used across the model zoo:
+  "embed"   d_model              (sharded over data axes under FSDP)
+  "vocab"   vocabulary           (tensor-parallel)
+  "heads"   attention heads * head_dim fused   (tensor-parallel)
+  "kv"      kv heads * head_dim fused          (tensor-parallel)
+  "ff"      mlp hidden           (tensor-parallel)
+  "experts" MoE expert axis      (expert-parallel)
+  "layers"  stacked scan axis    (never sharded)
+  None      replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed | small
+    scale: float = 1.0
+
+    def make(self, key, dtype):
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else max(self.shape[-1], 1)
+        if self.init == "embed":
+            std = 0.02  # GPT-2-style embedding init (tied-head friendly)
+        elif self.init == "small":
+            std = 0.006
+        else:
+            std = self.scale / np.sqrt(fan_in)
+        return (jax.random.normal(key, self.shape) * std).astype(dtype)
+
+
+def map_tree(fn: Callable[[ParamDef, Any], Any], defs, *extra):
+    """Map over a nested dict of ParamDef leaves."""
+    if isinstance(defs, ParamDef):
+        return fn(defs, *extra)
+    return {k: map_tree(fn, v, *extra) for k, v in defs.items()}
+
+
+def init_params(defs, key, dtype):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.make(k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(defs, dtype):
+    return map_tree(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs)
+
+
+def param_pspecs(defs, rules: dict[str | None, Any]):
+    """Logical axes -> PartitionSpec through the mesh rule table."""
+    def one(d: ParamDef):
+        return PS(*[rules.get(a, None) for a in d.axes])
+    return map_tree(one, defs)
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gain, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gain.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, gain, bias, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gain.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, params, kind: str):
+    if kind == "rms":
+        return rms_norm(x, params["scale"])
+    return layer_norm(x, params["scale"], params["bias"])
+
+
+def norm_defs(d_model: int, kind: str):
+    if kind == "rms":
+        return {"scale": ParamDef((d_model,), ("embed",), "ones")}
+    return {"scale": ParamDef((d_model,), ("embed",), "ones"),
+            "bias": ParamDef((d_model,), ("embed",), "zeros")}
+
+
+def activation(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":                   # squared ReLU (Primer / Nemotron-4)
+        r = jax.nn.relu(x)
+        return r * r
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(kind)
+
+
+def rope(q, k, positions, theta: float, head_dim: int):
+    """Rotary embeddings; q/k: (..., S, H, Dh), positions: (..., S)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+
+    def rot(x):
+        x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+        out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+        return out.astype(x.dtype)
+
+    return rot(q), rot(k)
+
+
+def sinusoidal_positions(n_ctx: int, d_model: int):
+    pos = np.arange(n_ctx)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d_model)
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, dtype=jnp.float32)

@@ -1,0 +1,170 @@
+"""ModelConfig: one frozen dataclass describing every architecture in the
+assigned pool (dense / MoE / hybrid-SSM / attention-free / enc-dec / VLM).
+
+``group`` is the repeating layer pattern, a tuple of (mixer, ffn) pairs:
+  mixer in {"attn", "mamba", "rwkv"}
+  ffn   in {"mlp", "moe", "moe+mlp" (parallel dense residual, Arctic),
+            "rwkv_cm"}
+The model is ``n_layers / len(group)`` scan iterations over the stacked
+group parameters — heterogeneous stacks (Jamba's 1:7 attn:mamba interleave
+with alternating MoE) stay a single compact scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                      # 0 -> d_model // n_heads
+    arch: str = "decoder"                # decoder | encdec | vlm
+    group: tuple = (("attn", "mlp"),)
+    act: str = "silu"
+    glu: bool = True
+    norm: str = "rms"
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    pos: str = "rope"                    # rope | learned | none
+    rope_theta: float = 1e4
+    tie_embeddings: bool = False
+    max_pos: int = 32768                 # learned-pos table size
+    # moe
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    router_z_weight: float = 1e-3
+    # mamba
+    d_state: int = 16
+    d_conv: int = 4
+    mamba_expand: int = 2
+    # rwkv
+    rwkv_head_size: int = 64
+    # whisper (enc-dec)
+    enc_layers: int = 0
+    n_audio_ctx: int = 1500
+    # vlm
+    n_img_tokens: int = 0
+    img_feat_dim: int = 1024
+    # numerics / memory knobs
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    attn_chunk: int = 1024
+    loss_chunk: int = 512
+    remat: str = "full"                  # full | dots | none
+
+    def __post_init__(self):
+        if self.d_head == 0:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+        # pad vocab to a multiple of 256 so the unembedding shards over any
+        # power-of-two TP degree (standard practice; only whisper's 51865
+        # actually changes — see configs/whisper_small.py)
+        object.__setattr__(self, "vocab", -(-self.vocab // 256) * 256)
+        assert self.n_layers % len(self.group) == 0, \
+            f"{self.name}: n_layers {self.n_layers} % group {len(self.group)}"
+        assert self.n_heads % self.n_kv == 0
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.group)
+
+    @property
+    def dt_rank(self) -> int:
+        return math.ceil(self.d_model / 16)
+
+    @property
+    def is_ssm_only(self) -> bool:
+        return all(m != "attn" for m, _ in self.group)
+
+    @property
+    def has_attention(self) -> bool:
+        return any(m == "attn" for m, _ in self.group)
+
+    @property
+    def attn_fraction(self) -> float:
+        return sum(m == "attn" for m, _ in self.group) / len(self.group)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Eligible for long_500k: SSM / hybrid / linear-attention."""
+        return self.attn_fraction <= 0.25
+
+    def param_count(self) -> int:
+        """Analytic parameter count (sanity-checked against arch names)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        h, kv, dh = self.n_heads, self.n_kv, self.d_head
+        total = v * d + (0 if self.tie_embeddings else d * v)
+        total += d  # final norm
+        fin = 2 * f if self.glu else f
+
+        def attn_p():
+            p = d * h * dh + 2 * d * kv * dh + h * dh * d
+            if self.qkv_bias:
+                p += h * dh + 2 * kv * dh
+            return p
+
+        def mlp_p():
+            return d * fin + f * d
+
+        def moe_p():
+            return d * self.n_experts + self.n_experts * (d * fin + f * d)
+
+        def mamba_p():
+            di = self.mamba_expand * d
+            return (d * 2 * di + self.d_conv * di + di
+                    + di * (self.dt_rank + 2 * self.d_state)
+                    + self.dt_rank * di + di + di * self.d_state + di
+                    + di * d)
+
+        def rwkv_tm_p():
+            return 5 * d * d + d * (5 * 32) + 5 * 32 * d + d * 64 + 64 * d + 9 * d
+
+        def rwkv_cm_p():
+            return d * f + f * d + d * d + 2 * d
+
+        for mixer, ffn in self.group:
+            total += 2 * d * self.n_groups  # norms
+            if mixer == "attn":
+                total += attn_p() * self.n_groups
+            elif mixer == "mamba":
+                total += mamba_p() * self.n_groups
+            elif mixer == "rwkv":
+                total += rwkv_tm_p() * self.n_groups
+            if ffn == "mlp":
+                total += mlp_p() * self.n_groups
+            elif ffn == "moe":
+                total += moe_p() * self.n_groups
+            elif ffn == "moe+mlp":
+                total += (moe_p() + mlp_p()) * self.n_groups
+            elif ffn == "rwkv_cm":
+                total += rwkv_cm_p() * self.n_groups
+        if self.arch == "encdec":
+            # encoder self-attn+mlp stacks + decoder cross-attn
+            total += self.enc_layers * (attn_p() + mlp_p() + 4 * d)
+            total += self.n_layers * (attn_p() + 2 * d)
+        if self.arch == "vlm":
+            total += self.img_feat_dim * d + d * d  # 2-layer projector
+        if self.pos == "learned":
+            total += self.max_pos * d
+        return total
+
+    def active_param_count(self) -> int:
+        """Active (per-token) params — MoE counts top_k of n_experts."""
+        if self.n_experts == 0:
+            return self.param_count()
+        full = self.param_count()
+        d, f = self.d_model, self.d_ff
+        fin = 2 * f if self.glu else f
+        per_expert = d * fin + f * d
+        n_moe_layers = sum(ffn in ("moe", "moe+mlp") for _, ffn in self.group) \
+            * self.n_groups
+        inactive = n_moe_layers * (self.n_experts - self.top_k) * per_expert
+        return full - inactive

@@ -1,0 +1,464 @@
+"""Model assembly: decoder-only / MoE / hybrid / attention-free / enc-dec /
+VLM language models from one block grammar (ModelConfig.group).
+
+Three entry points per model, all pure functions of (params, inputs):
+
+  forward_loss(params, batch, cfg)            training objective
+  prefill(params, tokens, cfg, ...)           full-sequence cache build
+  decode_step(params, cache, tok, idx, cfg)   one-token serving step
+
+Layers are stacked on a leading "layers" axis and executed with
+``lax.scan`` (HLO size independent of depth; remat policy per block).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import mamba as M
+from . import moe as F
+from . import rwkv6 as R
+from .common import (ParamDef, abstract_params, apply_norm, init_params,
+                     map_tree, norm_defs, param_pspecs, sinusoidal_positions)
+from .config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# parameter templates
+# ---------------------------------------------------------------------------
+
+def _stack(defs, n: int):
+    return map_tree(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init,
+                           d.scale), defs)
+
+
+def _block_defs(cfg: ModelConfig, with_cross: bool):
+    d = cfg.d_model
+    block: dict[str, Any] = {}
+    for i, (mixer, ffn) in enumerate(cfg.group):
+        e: dict[str, Any] = {"norm1": norm_defs(d, cfg.norm),
+                             "norm2": norm_defs(d, cfg.norm)}
+        if mixer == "attn":
+            e["attn"] = A.attn_defs(cfg)
+        elif mixer == "mamba":
+            e["mamba"] = M.mamba_defs(cfg)
+        elif mixer == "rwkv":
+            e["tm"] = R.rwkv_time_mix_defs(cfg)
+        if with_cross:
+            e["norm_cross"] = norm_defs(d, cfg.norm)
+            e["cross"] = A.attn_defs(cfg)
+        if ffn == "mlp":
+            e["mlp"] = F.mlp_defs(cfg)
+        elif ffn == "moe":
+            e["moe"] = F.moe_defs(cfg)
+        elif ffn == "moe+mlp":
+            e["moe"] = F.moe_defs(cfg)
+            e["mlp"] = F.mlp_defs(cfg)
+        elif ffn == "rwkv_cm":
+            e["cm"] = R.rwkv_channel_mix_defs(cfg)
+        block[f"l{i}"] = e
+    return block
+
+
+def model_defs(cfg: ModelConfig):
+    d, v = cfg.d_model, cfg.vocab
+    defs: dict[str, Any] = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), "embed"),
+        "final_norm": norm_defs(d, cfg.norm),
+        "blocks": _stack(_block_defs(cfg, with_cross=(cfg.arch == "encdec")),
+                         cfg.n_groups),
+    }
+    if not cfg.tie_embeddings:
+        defs["unembed"] = ParamDef((d, v), ("embed", "vocab"))
+    if cfg.pos == "learned":
+        defs["pos_embed"] = ParamDef((cfg.max_pos, d), (None, "embed"), "small")
+    if cfg.arch == "encdec":
+        enc_block = {"l0": {
+            "norm1": norm_defs(d, cfg.norm),
+            "norm2": norm_defs(d, cfg.norm),
+            "attn": A.attn_defs(cfg),
+            "mlp": F.mlp_defs(cfg),
+        }}
+        defs["enc_blocks"] = _stack(enc_block, cfg.enc_layers)
+        defs["enc_final_norm"] = norm_defs(d, cfg.norm)
+        defs["audio_proj"] = ParamDef((cfg.img_feat_dim, d), (None, "embed"))
+    if cfg.arch == "vlm":
+        defs["img_proj1"] = ParamDef((cfg.img_feat_dim, d), (None, "embed"))
+        defs["img_proj2"] = ParamDef((d, d), ("embed", None))
+    return defs
+
+
+def make_params(cfg: ModelConfig, seed: int = 0):
+    return init_params(model_defs(cfg), jax.random.PRNGKey(seed),
+                       jnp.dtype(cfg.param_dtype))
+
+
+def make_abstract_params(cfg: ModelConfig):
+    return abstract_params(model_defs(cfg), jnp.dtype(cfg.param_dtype))
+
+
+def make_param_pspecs(cfg: ModelConfig, rules):
+    return param_pspecs(model_defs(cfg), rules)
+
+
+# ---------------------------------------------------------------------------
+# block execution
+# ---------------------------------------------------------------------------
+
+def _apply_group(gp, h, cfg: ModelConfig, positions, enc, causal,
+                 collect_cache: bool = False, cache_len: int = 0):
+    """One repeat of cfg.group. Returns (h, aux, cache_entries)."""
+    aux_lb = jnp.zeros((), jnp.float32)
+    aux_z = jnp.zeros((), jnp.float32)
+    cache: dict[str, Any] = {}
+    for i, (mixer, ffn) in enumerate(cfg.group):
+        p = gp[f"l{i}"]
+        centry: dict[str, Any] = {}
+        u = apply_norm(h, p["norm1"], cfg.norm)
+        if mixer == "attn":
+            if collect_cache:
+                out, (k, v) = A.self_attention_kv(p["attn"], u, cfg, positions,
+                                                  causal=causal,
+                                                  cache_len=cache_len)
+                centry["k"], centry["v"] = k, v
+            else:
+                out = A.self_attention(p["attn"], u, cfg, positions,
+                                       causal=causal)
+        elif mixer == "mamba":
+            if collect_cache:
+                out, (conv, hs) = M.mamba_apply_state(p["mamba"], u, cfg)
+                centry["conv"], centry["h"] = conv, hs
+            else:
+                out = M.mamba_apply(p["mamba"], u, cfg)
+        elif mixer == "rwkv":
+            if collect_cache:
+                out, (px, s) = R.rwkv_time_mix_state(p["tm"], u, cfg)
+                centry["prev_tm"], centry["s"] = px, s
+            else:
+                out = R.rwkv_time_mix(p["tm"], u, cfg)
+        h = h + out
+        if enc is not None:
+            c = apply_norm(h, p["norm_cross"], cfg.norm)
+            h = h + A.cross_attention(p["cross"], c, enc, cfg)
+        u = apply_norm(h, p["norm2"], cfg.norm)
+        if ffn == "mlp":
+            h = h + F.mlp_apply(p["mlp"], u, cfg)
+        elif ffn == "moe":
+            y, a = F.moe_apply(p["moe"], u, cfg)
+            h = h + y
+            aux_lb += a["load_balance"]
+            aux_z += a["router_z"]
+        elif ffn == "moe+mlp":
+            y, a = F.moe_apply(p["moe"], u, cfg)
+            h = h + y + F.mlp_apply(p["mlp"], u, cfg)
+            aux_lb += a["load_balance"]
+            aux_z += a["router_z"]
+        elif ffn == "rwkv_cm":
+            if collect_cache:
+                centry["prev_cm"] = u[:, -1:, :]
+            h = h + R.rwkv_channel_mix(p["cm"], u, cfg)
+        if centry:
+            cache[f"l{i}"] = centry
+    return h, (aux_lb, aux_z), cache
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def run_blocks(stacked, h, cfg: ModelConfig, positions, enc=None,
+               causal=True, collect_cache=False, cache_len=0):
+    """Scan the stacked group params; returns (h, aux, stacked_cache).
+
+    The residual stream is sequence-sharded over "model" between blocks
+    (Megatron-style sequence parallelism) whenever a mesh is active and the
+    sequence is long enough to split — without this the widest archs cannot
+    hold per-layer residuals (DESIGN.md §3).
+    """
+    from ..parallel.sharding import ACT_DP, maybe_shard
+    from jax.sharding import PartitionSpec as PS
+    seq_shard = h.shape[1] >= 2048
+
+    def body(carry, gp):
+        h, lb, z = carry
+        if seq_shard:
+            h = maybe_shard(h, PS(ACT_DP, "model", None))
+        h, (alb, az), cache = _apply_group(
+            gp, h, cfg, positions, enc, causal, collect_cache, cache_len)
+        return (h, lb + alb, z + az), cache
+
+    body = _remat(body, cfg.remat)
+    z0 = jnp.zeros((), jnp.float32)
+    (h, lb, z), cache = jax.lax.scan(body, (h, z0, z0), stacked)
+    return h, (lb, z), cache
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding / loss
+# ---------------------------------------------------------------------------
+
+def _embed(params, tokens, cfg: ModelConfig, offset=0):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.compute_dtype)
+    if cfg.pos == "learned":
+        S = tokens.shape[1]
+        pe = jax.lax.dynamic_slice_in_dim(params["pos_embed"], offset, S, 0)
+        h = h + pe.astype(cfg.compute_dtype)
+    return h
+
+
+def _unembed_matrix(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def chunked_cross_entropy(h, unembed, labels, cfg: ModelConfig):
+    """Never materializes (B, S, vocab): scans seq chunks."""
+    B, S, D = h.shape
+    c = min(cfg.loss_chunk, S)
+    while S % c:
+        c -= 1
+    hs = h.reshape(B, S // c, c, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, S // c, c).transpose(1, 0, 2)
+
+    def body(carry, xc):
+        tot, cnt = carry
+        hc, lc = xc
+        from jax.sharding import PartitionSpec as PS
+        from ..parallel.sharding import ACT_DP, maybe_shard
+        logits = jnp.einsum("bcd,dv->bcv", hc, unembed).astype(jnp.float32)
+        logits = maybe_shard(logits, PS(ACT_DP, None, "model"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = lc >= 0
+        tot = (tot + jnp.where(mask, lse - gold, 0.0).sum()
+               ).astype(jnp.float32)
+        cnt = cnt + mask.sum(dtype=jnp.int32)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+        (hs, ls))
+    return tot / jnp.maximum(cnt, 1).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# training forward
+# ---------------------------------------------------------------------------
+
+def _encode_audio(params, audio, cfg: ModelConfig):
+    """Whisper encoder over stub frame features (B, n_audio_ctx, feat)."""
+    h = jnp.einsum("btf,fd->btd", audio.astype(cfg.compute_dtype),
+                   params["audio_proj"].astype(cfg.compute_dtype))
+    pe = sinusoidal_positions(cfg.n_audio_ctx, cfg.d_model)
+    h = h + pe[None].astype(cfg.compute_dtype)
+
+    def body(carry, gp):
+        h, lb, z = carry
+        p = gp["l0"]
+        u = apply_norm(h, p["norm1"], cfg.norm)
+        pos = jnp.arange(cfg.n_audio_ctx)
+        h = h + A.self_attention(p["attn"], u, cfg, pos, causal=False)
+        u = apply_norm(h, p["norm2"], cfg.norm)
+        h = h + F.mlp_apply(p["mlp"], u, cfg)
+        return (h, lb, z), None
+
+    body = _remat(body, cfg.remat)
+    z0 = jnp.zeros((), jnp.float32)
+    (h, _, _), _ = jax.lax.scan(body, (h, z0, z0), params["enc_blocks"])
+    return apply_norm(h, params["enc_final_norm"], cfg.norm)
+
+
+def forward_hidden(params, batch, cfg: ModelConfig):
+    """Shared trunk -> final hidden states + aux losses + label mask info."""
+    tokens = batch["tokens"]
+    enc = None
+    if cfg.arch == "encdec":
+        enc = _encode_audio(params, batch["audio"], cfg)
+        h = _embed(params, tokens, cfg)
+        positions = jnp.arange(tokens.shape[1])
+    elif cfg.arch == "vlm":
+        img = batch["img"].astype(cfg.compute_dtype)
+        pre = jnp.einsum("bnf,fd->bnd", img,
+                         params["img_proj1"].astype(cfg.compute_dtype))
+        pre = jnp.einsum("bnd,de->bne", jax.nn.gelu(pre),
+                         params["img_proj2"].astype(cfg.compute_dtype))
+        h = jnp.concatenate([pre, _embed(params, tokens, cfg)], axis=1)
+        positions = jnp.arange(h.shape[1])
+    else:
+        h = _embed(params, tokens, cfg)
+        positions = jnp.arange(tokens.shape[1])
+    h, aux, _ = run_blocks(params["blocks"], h, cfg, positions, enc=enc,
+                           causal=True)
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    return h, aux
+
+
+def forward_loss(params, batch, cfg: ModelConfig):
+    """Returns (scalar loss, metrics dict). batch["labels"]: -1 = masked."""
+    h, (lb, z) = forward_hidden(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.arch == "vlm":  # no loss on image prefix positions
+        B = labels.shape[0]
+        pad = jnp.full((B, cfg.n_img_tokens), -1, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    ce = chunked_cross_entropy(h, _unembed_matrix(params, cfg), labels, cfg)
+    loss = ce
+    metrics = {"ce": ce}
+    if cfg.n_experts:
+        loss = loss + cfg.aux_loss_weight * lb + cfg.router_z_weight * z
+        metrics["load_balance"] = lb
+        metrics["router_z"] = z
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Zeroed decode cache matching the stacked block structure."""
+    G = cfg.n_groups
+    kv, dh = cfg.n_kv, cfg.d_head
+    di = cfg.mamba_expand * cfg.d_model
+    H = cfg.d_model // cfg.rwkv_head_size
+    dtype = jnp.dtype(cfg.compute_dtype)
+    cache: dict[str, Any] = {}
+    for i, (mixer, ffn) in enumerate(cfg.group):
+        e: dict[str, Any] = {}
+        if mixer == "attn":
+            e["k"] = jnp.zeros((G, batch, max_len, kv, dh), dtype)
+            e["v"] = jnp.zeros((G, batch, max_len, kv, dh), dtype)
+        elif mixer == "mamba":
+            e["conv"] = jnp.zeros((G, batch, cfg.d_conv - 1, di), dtype)
+            e["h"] = jnp.zeros((G, batch, di, cfg.d_state), jnp.float32)
+        elif mixer == "rwkv":
+            e["prev_tm"] = jnp.zeros((G, batch, 1, cfg.d_model), dtype)
+            e["s"] = jnp.zeros((G, batch, H, cfg.rwkv_head_size,
+                                cfg.rwkv_head_size), jnp.float32)
+        if ffn == "rwkv_cm":
+            e["prev_cm"] = jnp.zeros((G, batch, 1, cfg.d_model), dtype)
+        if cfg.arch == "encdec":
+            e["ck"] = jnp.zeros((G, batch, cfg.n_audio_ctx, kv, dh), dtype)
+            e["cv"] = jnp.zeros((G, batch, cfg.n_audio_ctx, kv, dh), dtype)
+        cache[f"l{i}"] = e
+    return cache
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Process a full prompt; returns (cache, logits_last)."""
+    tokens = batch["tokens"]
+    enc = _encode_audio(params, batch["audio"], cfg) \
+        if cfg.arch == "encdec" else None
+    if cfg.arch == "vlm":
+        img = batch["img"].astype(cfg.compute_dtype)
+        pre = jnp.einsum("bnf,fd->bnd", img,
+                         params["img_proj1"].astype(cfg.compute_dtype))
+        pre = jnp.einsum("bnd,de->bne", jax.nn.gelu(pre),
+                         params["img_proj2"].astype(cfg.compute_dtype))
+        h = jnp.concatenate([pre, _embed(params, tokens, cfg)], axis=1)
+    else:
+        h = _embed(params, tokens, cfg)
+    positions = jnp.arange(h.shape[1])
+    h, _, cache = run_blocks(params["blocks"], h, cfg, positions, enc=enc,
+                             causal=True, collect_cache=True,
+                             cache_len=max_len)
+    if cfg.arch == "encdec":
+        cache = _add_cross_cache(params, cache, enc, cfg)
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1, :],
+                        _unembed_matrix(params, cfg)).astype(jnp.float32)
+    return cache, logits
+
+
+def _add_cross_cache(params, cache, enc, cfg: ModelConfig):
+    kv, dh = cfg.n_kv, cfg.d_head
+    B, T = enc.shape[0], enc.shape[1]
+
+    def per_group(gp, centry):
+        for i in range(len(cfg.group)):
+            p = gp[f"l{i}"]["cross"]
+            k = jnp.einsum("btd,dh->bth", enc, p["wk"])
+            v = jnp.einsum("btd,dh->bth", enc, p["wv"])
+            if cfg.qkv_bias:
+                k = k + p["bk"]
+                v = v + p["bv"]
+            centry[f"l{i}"]["ck"] = k.reshape(B, T, kv, dh)
+            centry[f"l{i}"]["cv"] = v.reshape(B, T, kv, dh)
+        return centry
+
+    def body(_, x):
+        gp, ce = x
+        return None, per_group(gp, ce)
+
+    _, cache = jax.lax.scan(body, None, (params["blocks"], cache))
+    return cache
+
+
+def decode_step(params, cache, tokens, cur_index, cfg: ModelConfig):
+    """One-token decode. tokens: (B, 1); cur_index: scalar int32.
+
+    Returns (logits (B, vocab) f32, updated cache).
+    """
+    h = _embed(params, tokens, cfg, offset=cur_index) \
+        if cfg.pos == "learned" else _embed(params, tokens, cfg)
+
+    def body(h, xs):
+        gp, gc = xs
+        newc = {}
+        for i, (mixer, ffn) in enumerate(cfg.group):
+            p = gp[f"l{i}"]
+            c = gc[f"l{i}"]
+            e = {}
+            u = apply_norm(h, p["norm1"], cfg.norm)
+            if mixer == "attn":
+                out, k, v = A.decode_self_attention(
+                    p["attn"], u, c["k"], c["v"], cur_index, cfg)
+                e["k"], e["v"] = k, v
+            elif mixer == "mamba":
+                out, conv, hs = M.mamba_decode_step(
+                    p["mamba"], u, c["conv"], c["h"], cfg)
+                e["conv"], e["h"] = conv, hs
+            elif mixer == "rwkv":
+                out, px, s = R.rwkv_time_mix_step(
+                    p["tm"], u, c["prev_tm"], c["s"], cfg)
+                e["prev_tm"], e["s"] = px, s
+            h = h + out
+            if cfg.arch == "encdec":
+                cx = apply_norm(h, p["norm_cross"], cfg.norm)
+                h = h + A.decode_cross_attention(p["cross"], cx, c["ck"],
+                                                 c["cv"], cfg)
+                e["ck"], e["cv"] = c["ck"], c["cv"]
+            u = apply_norm(h, p["norm2"], cfg.norm)
+            if ffn == "mlp":
+                h = h + F.mlp_apply(p["mlp"], u, cfg)
+            elif ffn in ("moe", "moe+mlp"):
+                y, _ = F.moe_apply(p["moe"], u, cfg)
+                h = h + y
+                if ffn == "moe+mlp":
+                    h = h + F.mlp_apply(p["mlp"], u, cfg)
+            elif ffn == "rwkv_cm":
+                out, pcm = R.rwkv_channel_mix_step(p["cm"], u, c["prev_cm"],
+                                                   cfg)
+                h = h + out
+                e["prev_cm"] = pcm
+            newc[f"l{i}"] = e
+        return h, newc
+
+    h, cache = jax.lax.scan(body, h, (params["blocks"], cache))
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1, :],
+                        _unembed_matrix(params, cfg)).astype(jnp.float32)
+    return logits, cache

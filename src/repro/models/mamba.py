@@ -1,0 +1,129 @@
+"""Mamba (selective SSM) block — the Jamba hybrid's mixer.
+
+Faithful mamba-1 structure: in-proj -> causal depthwise conv -> selective
+(input-dependent) dt/B/C -> diagonal state-space scan -> gated out-proj,
+with Jamba's dt/B/C RMS norms.
+
+The training scan is a `lax.scan` over time computing the per-step
+(B, d_inner, d_state) update in-register — nothing of size S x d_inner x
+d_state is ever materialized (that tensor would be TBs for Jamba). A
+chunked/parallel formulation is a known further optimization (see
+EXPERIMENTS.md §Perf); the serial scan keeps HLO compact and exact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef, rms_norm
+
+
+def mamba_defs(cfg):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    n = cfg.d_state
+    dtr = cfg.dt_rank
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("embed", "ff")),
+        "conv_w": ParamDef((cfg.d_conv, di), (None, "ff")),
+        "conv_b": ParamDef((di,), ("ff",), "zeros"),
+        "x_proj": ParamDef((di, dtr + 2 * n), ("ff", None)),
+        "dt_w": ParamDef((dtr, di), (None, "ff")),
+        "dt_b": ParamDef((di,), ("ff",), "zeros"),
+        "A_log": ParamDef((di, n), ("ff", None), "ones"),
+        "D": ParamDef((di,), ("ff",), "ones"),
+        "out_proj": ParamDef((di, d), ("ff", "embed")),
+        "dt_norm": ParamDef((dtr,), (None,), "ones"),
+        "b_norm": ParamDef((n,), (None,), "ones"),
+        "c_norm": ParamDef((n,), (None,), "ones"),
+    }
+
+
+def _conv_causal(x, w, b):
+    """Depthwise causal conv; x: (B,S,di), w: (K,di)."""
+    K, di = w.shape
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :], window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=di)
+    return out + b
+
+
+def _ssm_inputs(p, x, cfg):
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_conv_causal(xin, p["conv_w"], p["conv_b"]))
+    proj = jnp.einsum("bse,ef->bsf", xc, p["x_proj"])
+    dtr, n = cfg.dt_rank, cfg.d_state
+    dt_in, bb, cc = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt_in = rms_norm(dt_in, p["dt_norm"])
+    bb = rms_norm(bb, p["b_norm"])
+    cc = rms_norm(cc, p["c_norm"])
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt_in, p["dt_w"]) + p["dt_b"])
+    return xc, z, dt, bb, cc
+
+
+def _mamba_core(p, x, cfg):
+    B, S, D = x.shape
+    xc, z, dt, bb, cc = _ssm_inputs(p, x, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (di, n)
+
+    def step(h, inp):
+        xct, dtt, bt, ct = inp                            # (B,di),(B,di),(B,n),(B,n)
+        dA = jnp.exp(dtt.astype(jnp.float32)[..., None] * A)      # (B,di,n)
+        dBx = (dtt * xct).astype(jnp.float32)[..., None] * bt.astype(jnp.float32)[:, None, :]
+        h = h * dA + dBx
+        y = jnp.einsum("ben,bn->be", h, ct.astype(jnp.float32))
+        return h, y.astype(x.dtype)
+
+    h0 = jnp.zeros((B, cfg.mamba_expand * D, cfg.d_state), jnp.float32)
+    xs = (xc.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+          bb.transpose(1, 0, 2), cc.transpose(1, 0, 2))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2)                             # (B,S,di)
+    y = y + xc * p["D"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, h_final
+
+
+def mamba_apply(p, x, cfg):
+    """x: (B, S, D) -> (B, S, D)."""
+    return _mamba_core(p, x, cfg)[0]
+
+
+def mamba_apply_state(p, x, cfg):
+    """Prefill variant: also returns (conv_tail, h_final) decode state."""
+    out, h_final = _mamba_core(p, x, cfg)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, _ = jnp.split(xz, 2, axis=-1)
+    conv_tail = xin[:, -(cfg.d_conv - 1):, :]
+    return out, (conv_tail, h_final)
+
+
+def mamba_decode_step(p, x, conv_state, h, cfg):
+    """One-token decode. x: (B,1,D); conv_state: (B, K-1, di); h: (B,di,n)."""
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)                    # (B,1,di)
+    K = cfg.d_conv
+    window = jnp.concatenate([conv_state, xin[:, 0:1, :]], axis=1)  # (B,K,di)
+    xc = jax.nn.silu((window * p["conv_w"][None]).sum(axis=1, keepdims=True)
+                     + p["conv_b"])
+    proj = jnp.einsum("bse,ef->bsf", xc, p["x_proj"])
+    dtr, n = cfg.dt_rank, cfg.d_state
+    dt_in, bb, cc = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt_in = rms_norm(dt_in, p["dt_norm"])
+    bb = rms_norm(bb, p["b_norm"])
+    cc = rms_norm(cc, p["c_norm"])
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt_in, p["dt_w"]) + p["dt_b"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt[:, 0].astype(jnp.float32)[..., None] * A)
+    dBx = (dt[:, 0] * xc[:, 0]).astype(jnp.float32)[..., None] \
+        * bb[:, 0].astype(jnp.float32)[:, None, :]
+    h = h * dA + dBx
+    y = jnp.einsum("ben,bn->be", h, cc[:, 0].astype(jnp.float32))[:, None, :]
+    y = y.astype(x.dtype) + xc * p["D"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, window[:, 1:, :], h

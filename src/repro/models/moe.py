@@ -1,0 +1,122 @@
+"""Mixture-of-experts FFN: top-k softmax router + sort-based capacity
+dispatch (GShard/Switch style, dropped-token on overflow).
+
+Expert weights carry the "experts" logical axis -> sharded over the
+"model" mesh axis (expert parallelism). The (E, C, D) dispatch buffer gets
+an explicit sharding constraint on its expert axis so GSPMD materializes
+the token all-to-all instead of an all-gather.
+
+Aux outputs: load-balance loss (Switch eq. (4)) + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from ..parallel.sharding import ACT_DP, maybe_shard
+from .common import ParamDef, activation
+
+
+def moe_defs(cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    fin = 2 * f if cfg.glu else f
+    return {
+        "router": ParamDef((d, e), ("embed", None), scale=0.1),
+        "w_in": ParamDef((e, d, fin), ("experts", "embed", None)),
+        "w_out": ParamDef((e, f, d), ("experts", None, "embed")),
+    }
+
+
+def _capacity(tokens: int, cfg) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_apply(p, x, cfg, ep_axes=("model",)):
+    """x: (B, S, D) -> (y, aux) with aux = {load_balance, router_z}."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    C = _capacity(T, cfg)
+    # token-major tensors stay sharded over the data axes end to end; the
+    # only resharding is the token->expert all-to-all at the dispatch
+    # buffer (EP constraint below). Without these constraints GSPMD
+    # replicates the data-dependent scatter/gather operands (measured
+    # 285 GiB/device on arctic-480b train, see EXPERIMENTS.md §Perf).
+    xf = maybe_shard(x.reshape(T, D), PS(ACT_DP, None))
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    logits = maybe_shard(logits, PS(ACT_DP, None))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, K)              # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort token-slots by destination expert ----------------------------
+    # gather-only dispatch: both the (E, C, D) expert buffer and the
+    # (T, K, D) combine are gathers through index tables derived from one
+    # argsort — no data-sized scatter anywhere (GSPMD replicates scattered
+    # operands with data-dependent indices; measured on arctic-480b).
+    flat_e = expert.reshape(-1)                          # (T*K,)
+    order = jnp.argsort(flat_e)                          # stable
+    sorted_e = flat_e[order]
+    ones = jnp.ones_like(sorted_e)
+    counts = jax.ops.segment_sum(ones, sorted_e, num_segments=E)
+    offsets = jnp.cumsum(counts) - counts
+
+    slot_q = offsets[:, None] + jnp.arange(C)[None, :]   # (E, C) sorted pos
+    slot_valid = jnp.arange(C)[None, :] < counts[:, None]
+    slot_flat = jnp.where(slot_valid,
+                          order[jnp.clip(slot_q, 0, T * K - 1)], 0)
+    src_token = slot_flat // K                           # (E, C)
+    buf = jnp.where(slot_valid[..., None], xf[src_token], 0)
+    buf = maybe_shard(buf, PS(ep_axes, None, None))      # token->expert a2a
+
+    # ---- expert computation (grouped GEMM on the MXU) ----------------------
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"])
+    if cfg.glu:
+        u, g = jnp.split(h, 2, axis=-1)
+        h = u * activation(g, cfg.act)
+    else:
+        h = activation(h, cfg.act)
+    out = jnp.einsum("ecf,efd->ecd", h, p["w_out"]).reshape(E * C, D)
+
+    # ---- combine (gather back through the inverse permutation) -------------
+    inv = jnp.argsort(order)                             # (T*K,)
+    c_tk = inv - offsets[flat_e]                         # position in expert
+    keep = c_tk < C
+    back = flat_e * C + jnp.minimum(c_tk, C - 1)
+    slot_out = jnp.where(keep[:, None], out[back], 0.0)  # (T*K, D)
+    slot_out = maybe_shard(slot_out, PS(ACT_DP, None))   # expert->token a2a
+    y = (slot_out.reshape(T, K, D)
+         * gate[..., None].astype(x.dtype)).sum(axis=1).reshape(B, S, D)
+
+    # ---- aux losses ---------------------------------------------------------
+    me = probs.mean(axis=0)                              # mean router prob
+    ce = jax.ops.segment_sum(jnp.ones_like(flat_e), flat_e,
+                             num_segments=E) / (T * K)   # token fraction
+    aux = {
+        "load_balance": E * jnp.sum(me * ce),
+        "router_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+    return y, aux
+
+
+def mlp_defs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    fin = 2 * f if cfg.glu else f
+    return {
+        "w_in": ParamDef((d, fin), ("embed", "ff")),
+        "w_out": ParamDef((f, d), ("ff", "embed")),
+    }
+
+
+def mlp_apply(p, x, cfg):
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    if cfg.glu:
+        u, g = jnp.split(h, 2, axis=-1)
+        h = u * activation(g, cfg.act)
+    else:
+        h = activation(h, cfg.act)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"])

@@ -1,0 +1,159 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free mixer with
+data-dependent per-channel decay.
+
+Time-mix: token-shift with LoRA-interpolated lerp coefficients, decay
+w_t = exp(-exp(w0 + lora(x))) per channel, WKV matrix-state recurrence
+per head (state (dh, dh)), bonus u on the diagonal step, grouped
+head-norm, silu gate. Channel-mix: token-shift + squared-relu MLP with
+sigmoid receptance. Serial `lax.scan` over time for training (compact
+HLO, exact); O(1)-state decode step for serving — this is why rwkv6 runs
+the long_500k shape that dense-attention archs skip.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef
+
+
+LORA_TM = 32      # token-mix lora rank
+LORA_DECAY = 64   # decay lora rank
+
+
+def rwkv_time_mix_defs(cfg):
+    c = cfg.d_model
+    return {
+        "maa_x": ParamDef((c,), ("embed",), "zeros"),
+        "maa": ParamDef((5, c), (None, "embed"), "zeros"),   # w,k,v,r,g
+        "tm_w1": ParamDef((c, 5 * LORA_TM), ("embed", None), "small"),
+        "tm_w2": ParamDef((5, LORA_TM, c), (None, None, "embed"), "small"),
+        "w0": ParamDef((c,), ("embed",), "zeros"),
+        "td_w1": ParamDef((c, LORA_DECAY), ("embed", None), "small"),
+        "td_w2": ParamDef((LORA_DECAY, c), (None, "embed"), "small"),
+        "u": ParamDef((c,), ("embed",), "zeros"),
+        "wr": ParamDef((c, c), ("embed", "heads")),
+        "wk": ParamDef((c, c), ("embed", "heads")),
+        "wv": ParamDef((c, c), ("embed", "heads")),
+        "wg": ParamDef((c, c), ("embed", "heads")),
+        "wo": ParamDef((c, c), ("heads", "embed")),
+        "ln_x_scale": ParamDef((c,), ("embed",), "ones"),
+        "ln_x_bias": ParamDef((c,), ("embed",), "zeros"),
+    }
+
+
+def rwkv_channel_mix_defs(cfg):
+    c, f = cfg.d_model, cfg.d_ff
+    return {
+        "maa_k": ParamDef((c,), ("embed",), "zeros"),
+        "maa_r": ParamDef((c,), ("embed",), "zeros"),
+        "wk": ParamDef((c, f), ("embed", "ff")),
+        "wv": ParamDef((f, c), ("ff", "embed")),
+        "wr": ParamDef((c, c), ("embed", None)),
+    }
+
+
+def _shift(x, prev=None):
+    """Token shift: x_{t-1} (zero/`prev` at t=0). x: (B,S,C)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _tm_inputs(p, x, cfg, prev=None):
+    xx = _shift(x, prev) - x
+    xxx = x + xx * p["maa_x"]
+    m = jnp.tanh(jnp.einsum("bsc,cr->bsr", xxx, p["tm_w1"]))
+    m = m.reshape(*m.shape[:-1], 5, LORA_TM)
+    m = jnp.einsum("bsfr,frc->bsfc", m, p["tm_w2"])       # (B,S,5,C)
+    lerp = p["maa"][None, None] + m
+    xw, xk, xv, xr, xg = [x + xx * lerp[:, :, i] for i in range(5)]
+
+    H = cfg.d_model // cfg.rwkv_head_size
+    dh = cfg.rwkv_head_size
+
+    def heads(v):
+        return v.reshape(*v.shape[:-1], H, dh)
+
+    r = heads(jnp.einsum("bsc,ch->bsh", xr, p["wr"]))
+    k = heads(jnp.einsum("bsc,ch->bsh", xk, p["wk"]))
+    v = heads(jnp.einsum("bsc,ch->bsh", xv, p["wv"]))
+    g = jnp.einsum("bsc,ch->bsh", xg, p["wg"])
+    dec = jnp.exp(-jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + jnp.einsum("bsc,cr->bsr", jnp.tanh(
+            jnp.einsum("bsc,cd->bsd", xw, p["td_w1"])), p["td_w2"])
+        .astype(jnp.float32)))
+    return r, k, v, g, heads(dec), heads(p["u"][None, None])
+
+
+def _out_norm(p, wkv, g, cfg, B, S):
+    """Per-head group norm + gate + out projection. wkv: (B,S,H,dh)."""
+    x32 = wkv.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    y = ((x32 - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, S, cfg.d_model)
+    y = y * p["ln_x_scale"] + p["ln_x_bias"]
+    y = y.astype(wkv.dtype) * jax.nn.silu(g)
+    return jnp.einsum("bsc,cd->bsd", y, p["wo"])
+
+
+def _time_mix_core(p, x, cfg):
+    B, S, C = x.shape
+    r, k, v, g, w, u = _tm_inputs(p, x, cfg)
+    H, dh = C // cfg.rwkv_head_size, cfg.rwkv_head_size
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp                              # (B,H,dh) each
+        kv = kt.astype(jnp.float32)[..., None] * vt.astype(jnp.float32)[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj",
+                       rt.astype(jnp.float32),
+                       state + u.astype(jnp.float32)[0, 0, :, :, None] * kv)
+        state = state * wt.astype(jnp.float32)[..., None] + kv
+        return state, y
+
+    s0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    s_final, ys = jax.lax.scan(step, s0, xs)
+    wkv = ys.transpose(1, 0, 2, 3).astype(x.dtype)        # (B,S,H,dh)
+    return _out_norm(p, wkv, g, cfg, B, S), s_final
+
+
+def rwkv_time_mix(p, x, cfg):
+    """Training path; x: (B,S,C)."""
+    return _time_mix_core(p, x, cfg)[0]
+
+
+def rwkv_time_mix_state(p, x, cfg):
+    """Prefill variant: also returns (prev_x, state) for decoding."""
+    out, s_final = _time_mix_core(p, x, cfg)
+    return out, (x[:, -1:, :], s_final)
+
+
+def rwkv_time_mix_step(p, x, prev_x, state, cfg):
+    """Decode step. x: (B,1,C); state: (B,H,dh,dh) f32."""
+    B, _, C = x.shape
+    r, k, v, g, w, u = _tm_inputs(p, x, cfg, prev=prev_x)
+    rt, kt, vt, wt = (a[:, 0] for a in (r, k, v, w))
+    kv = kt.astype(jnp.float32)[..., None] * vt.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj", rt.astype(jnp.float32),
+                   state + u.astype(jnp.float32)[0, 0, :, :, None] * kv)
+    state = state * wt.astype(jnp.float32)[..., None] + kv
+    wkv = y[:, None].reshape(B, 1, C // cfg.rwkv_head_size, cfg.rwkv_head_size)
+    out = _out_norm(p, wkv.astype(x.dtype), g, cfg, B, 1)
+    return out, x[:, 0:1], state
+
+
+def rwkv_channel_mix(p, x, cfg, prev=None):
+    xx = _shift(x, prev) - x
+    xk = x + xx * p["maa_k"]
+    xr = x + xx * p["maa_r"]
+    h = jnp.einsum("bsc,cf->bsf", xk, p["wk"])
+    h = jnp.square(jax.nn.relu(h))
+    kv = jnp.einsum("bsf,fc->bsc", h, p["wv"])
+    return jax.nn.sigmoid(jnp.einsum("bsc,cd->bsd", xr, p["wr"])) * kv
+
+
+def rwkv_channel_mix_step(p, x, prev_x, cfg):
+    out = rwkv_channel_mix(p, x, cfg, prev=prev_x)
+    return out, x[:, 0:1]

@@ -1,0 +1,5 @@
+from .optim import OptConfig, init_opt_state, apply_updates, lr_schedule
+from .optim import global_norm
+
+__all__ = ["OptConfig", "init_opt_state", "apply_updates", "lr_schedule",
+           "global_norm"]

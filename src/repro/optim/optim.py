@@ -1,0 +1,148 @@
+"""Optimizers: AdamW (configurable state dtype) and Adafactor (factored
+second moment — the memory-feasible choice for the 300B+ archs), plus
+global-norm clipping and warmup-cosine schedule. Pure pytree functions; no
+external deps. Weight decay masks out 1-D params (norm gains, biases).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"              # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup: int = 200
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    state_dtype: str = "float32"     # "bfloat16" halves optimizer memory
+    # adafactor
+    factored_min_dim: int = 128
+    decay_rate: float = 0.8
+
+
+def lr_schedule(step, oc: OptConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(oc.warmup, 1))
+    t = jnp.clip((step - oc.warmup) / max(oc.total_steps - oc.warmup, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return oc.lr * warm * (oc.min_lr_ratio + (1 - oc.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def _decay_mask(p):
+    return jnp.asarray(1.0 if p.ndim >= 2 else 0.0, jnp.float32)
+
+
+def _factored(shape, min_dim):
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+# ---------------------------------------------------------------------------
+
+def init_opt_state(params, oc: OptConfig) -> dict[str, Any]:
+    sdt = jnp.dtype(oc.state_dtype)
+    if oc.name == "adamw":
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, sdt), params),
+        }
+    if oc.name == "adafactor":
+        def vrow(p):
+            if _factored(p.shape, oc.factored_min_dim):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        def vcol(p):
+            if _factored(p.shape, oc.factored_min_dim):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((1,) * p.ndim, jnp.float32)
+
+        return {
+            "vr": jax.tree.map(vrow, params),
+            "vc": jax.tree.map(vcol, params),
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                              params),
+        }
+    raise ValueError(oc.name)
+
+
+def _clip(grads, oc: OptConfig):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, oc.clip_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def apply_updates(params, grads, state, step, oc: OptConfig):
+    """Returns (new_params, new_state, stats)."""
+    grads, gn = _clip(grads, oc)
+    lr = lr_schedule(step, oc)
+    stats = {"grad_norm": gn, "lr": lr}
+    t = (step + 1).astype(jnp.float32)
+
+    if oc.name == "adamw":
+        bc1 = 1 - oc.b1 ** t
+        bc2 = 1 - oc.b2 ** t
+
+        def upd(p, g, m, v):
+            m32 = m.astype(jnp.float32) * oc.b1 + g * (1 - oc.b1)
+            v32 = v.astype(jnp.float32) * oc.b2 + g * g * (1 - oc.b2)
+            u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + oc.eps)
+            u = u + oc.weight_decay * _decay_mask(p) * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * u
+            return (newp.astype(p.dtype), m32.astype(m.dtype),
+                    v32.astype(v.dtype))
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+        newp = treedef.unflatten([l[0] for l in leaves])
+        newm = treedef.unflatten([l[1] for l in leaves])
+        newv = treedef.unflatten([l[2] for l in leaves])
+        return newp, {"m": newm, "v": newv}, stats
+
+    # ---- adafactor ---------------------------------------------------------
+    beta2 = 1.0 - t ** (-oc.decay_rate)
+
+    def upd(p, g, vr, vc, m):
+        g2 = g * g + 1e-30
+        if _factored(p.shape, oc.factored_min_dim):
+            vr32 = vr * beta2 + g2.mean(axis=-1) * (1 - beta2)
+            vc32 = vc * beta2 + g2.mean(axis=-2) * (1 - beta2)
+            denom = (vr32 / jnp.maximum(
+                vr32.mean(axis=-1, keepdims=True), 1e-30))[..., None] \
+                * vc32[..., None, :]
+            u = g * jax.lax.rsqrt(denom + 1e-30)
+        else:
+            vr32 = vr * beta2 + g2 * (1 - beta2)
+            vc32 = vc
+            u = g * jax.lax.rsqrt(vr32 + 1e-30)
+        # update clipping (Shazeer-Stern): rms(u) <= 1
+        urms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+        u = u / jnp.maximum(1.0, urms)
+        m32 = m.astype(jnp.float32) * oc.b1 + u * (1 - oc.b1)
+        u = m32
+        u = u + oc.weight_decay * _decay_mask(p) * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * u
+        return (newp.astype(p.dtype), vr32, vc32, m32.astype(m.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["vr"], state["vc"],
+                       state["m"])
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    newp = treedef.unflatten([l[0] for l in leaves])
+    newvr = treedef.unflatten([l[1] for l in leaves])
+    newvc = treedef.unflatten([l[2] for l in leaves])
+    newm = treedef.unflatten([l[3] for l in leaves])
+    return newp, {"vr": newvr, "vc": newvc, "m": newm}, stats

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run alone forces 512
+# virtual devices; see launch/dryrun.py). FMM oracle tests need f64.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

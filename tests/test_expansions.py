@@ -1,0 +1,115 @@
+"""Translation-operator correctness: matrix (MXU) forms vs the paper's
+scaled-Horner forms vs direct evaluation, plus composition properties."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import expansions as E
+
+RNG = np.random.default_rng(0)
+
+
+def _cluster(n, center, radius):
+    return center + radius * ((RNG.uniform(-1, 1, n))
+                              + 1j * RNG.uniform(-1, 1, n))
+
+
+def _direct(zs, xs, qs, kernel):
+    d = xs[None, :] - zs[:, None]
+    if kernel == "harmonic":
+        return (qs[None, :] / d).sum(-1)
+    return (qs[None, :] * np.log(zs[:, None] - xs[None, :])).sum(-1)
+
+
+@pytest.mark.parametrize("kernel", ["harmonic", "log"])
+@pytest.mark.parametrize("p", [4, 12, 24])
+def test_p2m_eval_converges(kernel, p):
+    xs = _cluster(50, 0.2 + 0.1j, 0.1)
+    qs = RNG.normal(size=50) + 1j * RNG.normal(size=50)
+    zt = _cluster(20, 2.0 - 1.0j, 0.1)
+    a = E.p2m_single(jnp.asarray(xs), jnp.asarray(qs), jnp.asarray(0.2 + 0.1j),
+                     p, kernel)
+    got = np.asarray(E.eval_multipole(a, 0.2 + 0.1j, jnp.asarray(zt)))
+    ref = _direct(zt, xs, qs, kernel)
+    if kernel == "log":
+        got, ref = got.real, ref.real
+    scale = np.abs(ref).max()
+    # sources within r~0.14 of center, targets ~2.1 away -> ratio ~0.07
+    tol = max(3 * 0.15 ** p, 1e-12)
+    assert np.abs(got - ref).max() / scale < tol
+
+
+@pytest.mark.parametrize("kernel", ["harmonic", "log"])
+def test_all_translations_vs_direct(kernel):
+    p = 14
+    xs = _cluster(40, 0.1 + 0.2j, 0.1)
+    qs = RNG.normal(size=40) + 1j * RNG.normal(size=40)
+    zt = _cluster(25, 2.0 - 1.5j, 0.08)
+    ref = _direct(zt, xs, qs, kernel)
+    reval = (lambda v: v.real) if kernel == "log" else (lambda v: v)
+
+    a = E.p2m_single(jnp.asarray(xs), jnp.asarray(qs),
+                     jnp.asarray(0.1 + 0.2j), p, kernel)
+    # M2M up, M2L across, L2L down
+    mm = jnp.asarray(E.m2m_matrix(p))
+    hm = jnp.asarray(E.m2l_matrix(p))
+    lm = jnp.asarray(E.l2l_matrix(p))
+    a2 = E.m2m_apply(a, jnp.asarray((0.1 + 0.2j) - (0.15 + 0.15j)), mm)
+    b = E.m2l_apply(a2, jnp.asarray((2.05 - 1.45j) - (0.15 + 0.15j)), hm)
+    c = E.l2l_apply(b, jnp.asarray((2.0 - 1.5j) - (2.05 - 1.45j)), lm)
+    got = np.asarray(E.eval_local(c, 2.0 - 1.5j, jnp.asarray(zt)))
+    err = np.abs(reval(got) - reval(ref)).max() / np.abs(reval(ref)).max()
+    assert err < 1e-5
+
+
+@pytest.mark.parametrize("kernel", ["harmonic", "log"])
+@pytest.mark.parametrize("p", [3, 9, 17])
+def test_horner_equals_matrix_forms(kernel, p):
+    a = (RNG.normal(size=(6, p + 1)) + 1j * RNG.normal(size=(6, p + 1)))
+    if kernel == "harmonic":
+        a[:, 0] = 0
+    a = jnp.asarray(a)
+    t = jnp.asarray(RNG.normal(size=6) + 1j * RNG.normal(size=6))
+    np.testing.assert_allclose(
+        np.asarray(E.m2m_horner(a, t)),
+        np.asarray(E.m2m_apply(a, t, jnp.asarray(E.m2m_matrix(p)))),
+        rtol=1e-10, atol=1e-12)
+    np.testing.assert_allclose(
+        np.asarray(E.l2l_horner(a, t)),
+        np.asarray(E.l2l_apply(a, t, jnp.asarray(E.l2l_matrix(p)))),
+        rtol=1e-10, atol=1e-12)
+    r = t + 4.0  # well separated
+    np.testing.assert_allclose(
+        np.asarray(E.m2l_horner(a, r)),
+        np.asarray(E.m2l_apply(a, r, jnp.asarray(E.m2l_matrix(p)))),
+        rtol=1e-9, atol=1e-11)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 20), st.floats(-1, 1), st.floats(-1, 1),
+       st.floats(-1, 1), st.floats(-1, 1))
+def test_m2m_composition_property(p, a1, b1, a2, b2):
+    """Shifting z0->z1->z2 equals shifting z0->z2 (pure group property)."""
+    t1 = complex(a1, b1) + 0.31
+    t2 = complex(a2, b2) + 0.17j
+    coeffs = RNG.normal(size=p + 1) + 1j * RNG.normal(size=p + 1)
+    mm = jnp.asarray(E.m2m_matrix(p))
+    one = E.m2m_apply(jnp.asarray(coeffs), jnp.asarray(t1 + t2), mm)
+    two = E.m2m_apply(E.m2m_apply(jnp.asarray(coeffs), jnp.asarray(t1), mm),
+                      jnp.asarray(t2), mm)
+    np.testing.assert_allclose(np.asarray(one), np.asarray(two),
+                               rtol=1e-7, atol=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 20))
+def test_l2l_composition_property(p):
+    s1, s2 = 0.3 - 0.1j, -0.2 + 0.25j
+    coeffs = jnp.asarray(RNG.normal(size=p + 1) + 1j * RNG.normal(size=p + 1))
+    lm = jnp.asarray(E.l2l_matrix(p))
+    one = E.l2l_apply(coeffs, jnp.asarray(s1 + s2), lm)
+    two = E.l2l_apply(E.l2l_apply(coeffs, jnp.asarray(s1), lm),
+                      jnp.asarray(s2), lm)
+    np.testing.assert_allclose(np.asarray(one), np.asarray(two),
+                               rtol=1e-7, atol=1e-9)

@@ -1,0 +1,82 @@
+"""End-to-end FMM accuracy vs the O(N^2) oracle (paper eq. (5.3)) and the
+p -> tolerance law; f32 and f64; both translation backends; the adaptive
+P2L/M2P optimization on and off."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (FmmConfig, direct_potential, fmm_potential,
+                        rel_error_inf)
+from repro.data.synthetic import particles
+
+
+def _run(n=2048, levels=3, p=12, dist="uniform", seed=0, **kw):
+    z, q = particles(dist, n, seed)
+    cfg = FmmConfig(n=n, nlevels=levels, p=p, **kw)
+    phi = fmm_potential(jnp.asarray(z), jnp.asarray(q), cfg)
+    ref = direct_potential(jnp.asarray(z), jnp.asarray(z), jnp.asarray(q))
+    return rel_error_inf(np.asarray(phi), np.asarray(ref))
+
+
+@pytest.mark.parametrize("dist", ["uniform", "normal", "layer"])
+def test_accuracy_three_distributions(dist):
+    assert _run(dist=dist, p=16, dtype="f64") < 2e-5  # eccentric "layer" boxes
+    # converge slightly slower (half-diagonal radii); cf. paper Fig 5.8-5.9
+
+
+def test_accuracy_paper_p17_tolerance():
+    """Paper §5.1: p=17 -> TOL ~ 1e-6 at theta = 1/2."""
+    assert _run(p=17, dtype="f64") < 2e-6
+
+
+def test_error_decays_with_p():
+    errs = [_run(p=p, dtype="f64") for p in (4, 8, 12, 16)]
+    assert all(a > b for a, b in zip(errs, errs[1:]))
+    # contraction per term ~ theta/(1+theta) = 1/3; allow slack
+    assert errs[-1] < errs[0] * 1e-4
+
+
+def test_f32_reaches_single_precision_floor():
+    err = _run(p=17, dtype="f32")
+    assert err < 5e-4  # f32 floor amplified by cancellation; see DESIGN §2
+
+
+def test_horner_equals_mxu_pipeline():
+    e1 = _run(p=10, dtype="f64", translations="mxu")
+    e2 = _run(p=10, dtype="f64", translations="horner")
+    assert abs(e1 - e2) / e1 < 1e-6
+
+
+def test_p2l_m2p_optimization_preserves_answer():
+    e_on = _run(p=12, dist="normal", dtype="f64", use_p2l_m2p=True)
+    e_off = _run(p=12, dist="normal", dtype="f64", use_p2l_m2p=False)
+    assert e_on < 5e-4 and e_off < 5e-4
+
+
+def test_log_kernel():
+    z, q = particles("uniform", 1024, 3)
+    cfg = FmmConfig(n=1024, nlevels=2, p=14, kernel="log", dtype="f64")
+    phi = fmm_potential(jnp.asarray(z), jnp.asarray(q), cfg)
+    ref = direct_potential(jnp.asarray(z), jnp.asarray(z), jnp.asarray(q),
+                           kernel="log")
+    err = rel_error_inf(np.real(np.asarray(phi)), np.real(np.asarray(ref)))
+    assert err < 3e-5
+
+
+def test_single_level_tree():
+    """nlevels=0 degenerates to direct evaluation through P2P."""
+    z, q = particles("uniform", 128, 4)
+    cfg = FmmConfig(n=128, nlevels=0, p=4, dtype="f64")
+    phi = fmm_potential(jnp.asarray(z), jnp.asarray(q), cfg)
+    ref = direct_potential(jnp.asarray(z), jnp.asarray(z), jnp.asarray(q))
+    assert rel_error_inf(np.asarray(phi), np.asarray(ref)) < 1e-12
+
+
+def test_potential_is_permutation_equivariant():
+    z, q = particles("uniform", 512, 5)
+    cfg = FmmConfig(n=512, nlevels=2, p=12, dtype="f64")
+    phi = np.asarray(fmm_potential(jnp.asarray(z), jnp.asarray(q), cfg))
+    perm = np.random.default_rng(0).permutation(512)
+    phi_p = np.asarray(fmm_potential(jnp.asarray(np.asarray(z)[perm]),
+                                     jnp.asarray(np.asarray(q)[perm]), cfg))
+    np.testing.assert_allclose(phi_p, phi[perm], rtol=1e-9, atol=1e-11)

@@ -1,0 +1,143 @@
+"""Pallas kernels vs their pure-jnp ref.py oracles (interpret=True on CPU),
+swept over shapes and dtypes, plus end-to-end pipeline equivalence."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (FmmConfig, fmm_build, fmm_evaluate,
+                        leaf_particle_index)
+from repro.core import expansions as E
+from repro.data.synthetic import particles
+from repro.kernels import (l2p_apply, l2p_pallas, l2p_ref, m2l_level_apply,
+                           m2l_pallas, m2l_ref, nbody_direct, nbody_pallas,
+                           nbody_ref, p2p_apply, p2p_pallas, p2p_ref)
+from repro.kernels.common import dense_leaf_arrays, round_up
+
+RNG = np.random.default_rng(7)
+
+
+def _planes(shape, dtype):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# nbody
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,dtype", [(256, jnp.float32), (512, jnp.float64),
+                                     (700, jnp.float32)])
+def test_nbody_kernel_vs_ref(n, dtype):
+    cdt = jnp.complex64 if dtype == jnp.float32 else jnp.complex128
+    tz = (RNG.uniform(0, 1, n) + 1j * RNG.uniform(0, 1, n))
+    q = RNG.normal(size=n) + 1j * RNG.normal(size=n)
+    # eval and source points must be bit-identical for self-exclusion
+    zj = jnp.asarray(tz).astype(cdt)
+    qj = jnp.asarray(q).astype(cdt)
+    tzr, tzi = jnp.real(zj), jnp.imag(zj)
+    qr, qi = jnp.real(qj), jnp.imag(qj)
+    refr, refi = nbody_ref(tzr, tzi, tzr, tzi, qr, qi)
+    got = nbody_direct(zj, zj, qj, t_tile=128, s_tile=256, interpret=True)
+    rtol = 2e-4 if dtype == jnp.float32 else 1e-10
+    np.testing.assert_allclose(np.real(np.asarray(got)), np.asarray(refr),
+                               rtol=rtol, atol=rtol * np.abs(refr).max())
+    np.testing.assert_allclose(np.imag(np.asarray(got)), np.asarray(refi),
+                               rtol=rtol, atol=rtol * np.abs(refi).max())
+
+
+# ---------------------------------------------------------------------------
+# p2p / m2l / l2p against refs on a real FMM plan
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module", params=["f32", "f64"])
+def plan(request):
+    n, levels = 1024, 2
+    z, q = particles("normal", n, 11)
+    cfg = FmmConfig(n=n, nlevels=levels, p=8, dtype=request.param,
+                    strong_cap=40, weak_cap=64)
+    pl = fmm_build(jnp.asarray(z), jnp.asarray(q), cfg)
+    return cfg, pl
+
+
+def test_p2p_kernel_vs_ref(plan):
+    cfg, pl = plan
+    idx = leaf_particle_index(cfg)
+    n_pad = round_up(idx.shape[1], 128)
+    zr, zi, qr, qi, _ = dense_leaf_arrays(pl.tree.z, pl.tree.q, idx, n_pad)
+    outr, outi = p2p_pallas(pl.conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi,
+                            interpret=True)
+    refr, refi = p2p_ref(pl.conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi)
+    tol = 1e-3 if cfg.dtype == "f32" else 1e-9
+    scale = np.abs(np.asarray(refr)).max()
+    np.testing.assert_allclose(np.asarray(outr), np.asarray(refr),
+                               atol=tol * scale)
+    np.testing.assert_allclose(np.asarray(outi), np.asarray(refi),
+                               atol=tol * scale)
+
+
+def test_m2l_kernel_vs_ref(plan):
+    cfg, pl = plan
+    if cfg.dtype == "f64":
+        pytest.skip("pallas m2l validated in f32 (TPU target dtype)")
+    from repro.core.fmm import effective_radii, m2l_level, upward
+    rho = effective_radii(pl.tree, cfg)
+    mult = upward(pl.tree, cfg, rho)
+    l = cfg.nlevels
+    got = m2l_level_apply(mult[l], pl.conn.weak[l], pl.tree.centers[l], cfg,
+                          rho[l], interpret=True)
+    # oracle: the jnp m2l_level from the core pipeline
+    mat = jnp.asarray(E.m2l_matrix(cfg.p), dtype=cfg.real_dtype)
+    ref = m2l_level(mult[l], pl.conn.weak[l], pl.tree.centers[l], cfg, mat,
+                    rho[l])
+    scale = np.abs(np.asarray(ref)).max()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5 * scale)
+
+
+def test_l2p_kernel_vs_ref(plan):
+    cfg, pl = plan
+    from repro.core.fmm import downward, upward, l2p
+    mult = upward(pl.tree, cfg)
+    local = downward(mult, pl.tree, pl.conn, cfg)
+    idx = leaf_particle_index(cfg)
+    got = l2p_apply(local, pl.tree, cfg, idx, interpret=True)
+    ref = l2p(local, pl.tree, cfg)
+    tol = 1e-4 if cfg.dtype == "f32" else 1e-10
+    scale = max(np.abs(np.asarray(ref)).max(), 1e-9)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=tol * scale)
+
+
+def test_full_pipeline_with_kernels(plan):
+    cfg, pl = plan
+    phi_ref = fmm_evaluate(pl, cfg)
+
+    def p2p_impl(tree, conn, c, i):
+        return p2p_apply(tree, conn, c, i, interpret=True)
+
+    def m2l_impl(mult, weak, centers, c, rho):
+        return m2l_level_apply(mult, weak, centers, c, rho, interpret=True)
+
+    if cfg.dtype == "f64":
+        phi = fmm_evaluate(pl, cfg, p2p_impl=p2p_impl)
+        tol = 1e-9
+    else:
+        phi = fmm_evaluate(pl, cfg, p2p_impl=p2p_impl, m2l_impl=m2l_impl)
+        tol = 5e-4
+    scale = np.abs(np.asarray(phi_ref)).max()
+    np.testing.assert_allclose(np.asarray(phi), np.asarray(phi_ref),
+                               atol=tol * scale)
+
+
+def test_l2p_pallas_shape_sweep():
+    for nbox, n_pad, P, p in [(4, 128, 128, 5), (16, 256, 128, 17)]:
+        br = _planes((nbox, P), jnp.float32)
+        bi = _planes((nbox, P), jnp.float32)
+        tr = _planes((nbox, n_pad), jnp.float32) * 0.1
+        ti = _planes((nbox, n_pad), jnp.float32) * 0.1
+        outr, outi = l2p_pallas(br, bi, tr, ti, p=p, interpret=True)
+        refr, refi = l2p_ref(br, bi, tr, ti, p)
+        np.testing.assert_allclose(np.asarray(outr), np.asarray(refr),
+                                   rtol=2e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(outi), np.asarray(refi),
+                                   rtol=2e-4, atol=1e-4)

@@ -1,0 +1,92 @@
+"""Launch-layer infrastructure: HLO collective accounting, sharding rules,
+config registry, batch specs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as PS
+
+from repro.configs import ARCH_NAMES, SHAPES, applicable, get_config, get_opt
+from repro.data.synthetic import batch_specs
+from repro.launch.hlo_analysis import (collective_bytes_weighted,
+                                       shape_bytes, _split_computations)
+from repro.parallel.sharding import Rules, dp_axes, maybe_shard
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[128,256]") == 128 * 256 * 4
+    assert shape_bytes("bf16[8,8]{1,0}") == 128
+    assert shape_bytes("(f32[4], s8[16])") == 32
+    assert shape_bytes("pred[]") == 1
+
+
+def test_collective_weighting_by_trip_count():
+    hlo = """
+%body.1 (p: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %p = (s32[], f32[64]) parameter(0)
+  %ar = f32[64]{0} all-reduce(%x), to_apply=%add.1
+}
+
+%cond.1 (p: (s32[], f32[64])) -> pred[] {
+  %p = (s32[], f32[64]) parameter(0)
+}
+
+ENTRY %main (a: f32[64]) -> f32[64] {
+  %ag = f32[128]{0} all-gather(%a), dimensions={0}
+  %w = (s32[], f32[64]) while(%t), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"10"}}
+}
+"""
+    out = collective_bytes_weighted(hlo)
+    assert out["all-gather"] == 128 * 4
+    assert out["all-reduce"] == 10 * 64 * 4
+    comps = _split_computations(hlo)
+    assert set(comps) == {"body.1", "cond.1", "main"}
+
+
+def test_rules_table():
+    r = Rules(multi_pod=True, fsdp=True)
+    t = r.table()
+    assert t["ff"] == "model" and t["experts"] == "model"
+    assert t["embed"] == ("pod", "data")
+    assert dp_axes(False) == ("data",)
+    r2 = Rules(multi_pod=False, fsdp=False)
+    assert r2.table()["embed"] is None
+
+
+def test_maybe_shard_no_mesh_is_identity():
+    x = jnp.ones((4, 4))
+    y = maybe_shard(x, PS("data", None))
+    assert (np.asarray(y) == 1).all()
+
+
+def test_registry_complete():
+    assert len(ARCH_NAMES) == 10
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        oc = get_opt(name)
+        assert cfg.vocab % 256 == 0          # TP-friendly padding
+        assert cfg.n_layers % len(cfg.group) == 0
+        assert oc.name in ("adamw", "adafactor")
+
+
+def test_shape_applicability_matrix():
+    runs = {n: [s for s in SHAPES if applicable(get_config(n), s)[0]]
+            for n in ARCH_NAMES}
+    # exactly the ssm/hybrid archs run long_500k
+    long_runners = {n for n, ss in runs.items() if "long_500k" in ss}
+    assert long_runners == {"jamba-1.5-large-398b", "rwkv6-1.6b"}
+    # everyone runs the other three shapes
+    for n, ss in runs.items():
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(ss)
+
+
+def test_batch_specs_cover_modalities():
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        spec = batch_specs(cfg, 8, 64)
+        assert "tokens" in spec
+        if cfg.arch == "encdec":
+            assert "audio" in spec
+        if cfg.arch == "vlm":
+            assert "img" in spec
+            assert spec["tokens"].shape[1] == 64 - cfg.n_img_tokens

@@ -1,0 +1,103 @@
+"""Per-arch smoke tests (reduced same-family configs) + cache-path
+correctness: prefill+decode logits must match the full forward pass."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, smoke_config
+from repro.data.synthetic import DataConfig, lm_batch
+from repro.models import (decode_step, forward_hidden, forward_loss,
+                          init_cache, lm, make_params, prefill)
+
+B, S = 2, 16
+
+
+def _batch(cfg, seed=0, seq=S):
+    dc = DataConfig(vocab=cfg.vocab, batch=B, seq=seq, seed=seed)
+    return lm_batch(dc, 0, cfg)
+
+
+@pytest.fixture(scope="module")
+def arch_state(request):
+    cfg = smoke_config(request.param)
+    params = make_params(cfg, 0)
+    return cfg, params
+
+
+def pytest_generate_tests(metafunc):
+    if "arch_state" in metafunc.fixturenames:
+        metafunc.parametrize("arch_state", list(ARCH_NAMES), indirect=True)
+
+
+def test_forward_and_grads(arch_state):
+    cfg, params = arch_state
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(
+        lambda p, b: forward_loss(p, b, cfg))(params, batch)
+    assert np.isfinite(float(loss)), cfg.name
+    g = jax.grad(lambda p: forward_loss(p, _batch(cfg), cfg)[0])(params)
+    leaves = jax.tree.leaves(g)
+    assert all(np.isfinite(np.asarray(x)).all() for x in leaves), cfg.name
+    # no dead parameters: the embedding and at least 90% of leaves get grads
+    nonzero = sum(float(jnp.any(x != 0)) for x in leaves)
+    assert nonzero >= 0.9 * len(leaves), f"{cfg.name}: dead grads"
+
+
+def test_prefill_decode_matches_forward(arch_state):
+    """Decode with a prefilled cache must reproduce teacher-forced logits."""
+    cfg, params = arch_state
+    full = _batch(cfg, seq=S + 1)
+    prompt = {k: (v[:, :S] if k in ("tokens", "labels") else v)
+              for k, v in full.items()}
+
+    # reference: forward over S+1 tokens, logits at the last position
+    h, _ = forward_hidden(params, full, cfg)
+    un = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    ref_logits = np.asarray(
+        jnp.einsum("d,dv->v", h[0, -1].astype(jnp.float32),
+                   un.astype(jnp.float32)))
+
+    cache, _ = prefill(params, prompt, cfg,
+                       max_len=S + 4 + cfg.n_img_tokens)
+    pos = S + cfg.n_img_tokens if cfg.arch == "vlm" else S
+    logits, _ = decode_step(params, cache,
+                            full["tokens"][:, S:S + 1], jnp.int32(pos), cfg)
+    got = np.asarray(logits)[0]
+    scale = np.abs(ref_logits).max()
+    np.testing.assert_allclose(got, ref_logits, atol=2e-3 * scale,
+                               err_msg=cfg.name)
+
+
+def test_abstract_params_match_real(arch_state):
+    cfg, params = arch_state
+    ab = lm.make_abstract_params(cfg)
+    real_flat = jax.tree.leaves(params)
+    ab_flat = jax.tree.leaves(ab)
+    assert len(real_flat) == len(ab_flat)
+    for r, a in zip(real_flat, ab_flat):
+        assert r.shape == a.shape and r.dtype == a.dtype
+
+
+def test_init_cache_structure(arch_state):
+    cfg, params = arch_state
+    cache = init_cache(cfg, B, 8 + cfg.n_img_tokens)
+    prompt = _batch(cfg, seq=8)
+    c2, _ = prefill(params, prompt, cfg, max_len=8 + cfg.n_img_tokens)
+    s1 = jax.tree.structure(cache)
+    s2 = jax.tree.structure(c2)
+    assert s1 == s2, f"{cfg.name}: {s1} vs {s2}"
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(c2)):
+        assert a.shape == b.shape, cfg.name
+
+
+def test_full_configs_param_counts():
+    expected = {
+        "dbrx-132b": 132, "arctic-480b": 480, "jamba-1.5-large-398b": 398,
+        "qwen1.5-0.5b": 0.5, "nemotron-4-340b": 340, "qwen2-72b": 72,
+        "qwen3-0.6b": 0.6, "llava-next-mistral-7b": 7,
+        "whisper-small": 0.24, "rwkv6-1.6b": 1.6,
+    }
+    for name, bn in expected.items():
+        got = get_config(name).param_count() / 1e9
+        assert 0.75 * bn <= got <= 1.35 * bn, f"{name}: {got:.2f}B vs {bn}B"

@@ -1,0 +1,118 @@
+"""Topological-phase invariants: balanced pyramid, static layout,
+theta-criterion completeness (every pair covered exactly once)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FmmConfig, build_connectivity, build_tree,
+                        leaf_ids, leaf_particle_index)
+from repro.core.config import level_bounds
+from repro.data.synthetic import particles
+
+
+def _tree(n, levels, dist="uniform", seed=0, **kw):
+    z, q = particles(dist, n, seed)
+    cfg = FmmConfig(n=n, nlevels=levels, p=5, dtype="f64", **kw)
+    return cfg, build_tree(jnp.asarray(z), jnp.asarray(q), cfg)
+
+
+@pytest.mark.parametrize("n,levels", [(64, 1), (257, 2), (1024, 3)])
+def test_balanced_leaves(n, levels):
+    cfg, tree = _tree(n, levels)
+    lb = level_bounds(cfg)[-1]
+    sizes = np.diff(lb)
+    assert sizes.min() >= n // 4**levels
+    assert sizes.max() <= -(-n // 4**levels) + 1
+    assert sizes.sum() == n
+
+
+def test_perm_is_permutation_and_boxes_contain_points():
+    cfg, tree = _tree(512, 2)
+    perm = np.asarray(tree.perm)
+    assert sorted(perm.tolist()) == list(range(512))
+    # every particle within its leaf's bounding radius
+    lid = leaf_ids(cfg)
+    z = np.asarray(tree.z)
+    c = np.asarray(tree.centers[cfg.nlevels])[lid]
+    r = np.asarray(tree.radii[cfg.nlevels])[lid]
+    assert (np.abs(z - c) <= r + 1e-12).all()
+
+
+def test_leaf_particle_index_static_layout():
+    cfg, _ = _tree(300, 2)
+    idx = leaf_particle_index(cfg)
+    flat = idx[idx >= 0]
+    assert sorted(flat.tolist()) == list(range(300))
+    lb = level_bounds(cfg)[-1]
+    for b in range(16):
+        got = idx[b][idx[b] >= 0]
+        assert (got == np.arange(lb[b], lb[b + 1])).all()
+
+
+@pytest.mark.parametrize("dist", ["uniform", "normal", "layer"])
+def test_theta_criterion_on_weak_pairs(dist):
+    """Every weak (M2L) pair must satisfy the separation criterion (2.1)."""
+    cfg, tree = _tree(2048, 3, dist)
+    conn = build_connectivity(tree, cfg)
+    assert int(conn.overflow) == 0
+    for l in range(1, cfg.nlevels + 1):
+        c = np.asarray(tree.centers[l])
+        r = np.asarray(tree.radii[l])
+        weak = np.asarray(conn.weak[l])
+        for b in range(weak.shape[0]):
+            for s in weak[b][weak[b] >= 0]:
+                d = abs(c[b] - c[s])
+                big, small = max(r[b], r[s]), min(r[b], r[s])
+                assert big + cfg.theta * small <= cfg.theta * d + 1e-9
+
+
+@pytest.mark.parametrize("dist,seed", [("uniform", 0), ("normal", 1),
+                                       ("layer", 2)])
+def test_pair_coverage_exactly_once(dist, seed):
+    """Completeness: each leaf-box pair is handled by exactly one of
+    {weak@some level (via ancestors), leaf p2p, leaf p2l, leaf m2p}."""
+    n, L = 512, 2
+    cfg, tree = _tree(n, L, dist, seed)
+    conn = build_connectivity(tree, cfg)
+    nb = 4**L
+    count = np.zeros((nb, nb), dtype=int)
+
+    def descendants(box, l):
+        span = 4 ** (L - l)
+        return range(box * span, (box + 1) * span)
+
+    for l in range(1, L + 1):
+        weak = np.asarray(conn.weak[l])
+        for b in range(weak.shape[0]):
+            for s in weak[b][weak[b] >= 0]:
+                for db in descendants(b, l):
+                    for ds in descendants(s, l):
+                        count[db, ds] += 1
+    for name in ("p2p", "p2l", "m2p"):
+        lst = np.asarray(getattr(conn, name))
+        for b in range(nb):
+            for s in lst[b][lst[b] >= 0]:
+                count[b, s] += 1
+    assert (count == 1).all(), f"coverage min {count.min()} max {count.max()}"
+
+
+def test_p2l_m2p_are_symmetric_partners():
+    """If (b <- src) is P2L then (src <- b) must be M2P (directed lists)."""
+    cfg, tree = _tree(2048, 3, "normal")
+    conn = build_connectivity(tree, cfg)
+    p2l = np.asarray(conn.p2l)
+    m2p = np.asarray(conn.m2p)
+    pairs_p2l = {(b, s) for b in range(p2l.shape[0])
+                 for s in p2l[b][p2l[b] >= 0]}
+    pairs_m2p = {(b, s) for b in range(m2p.shape[0])
+                 for s in m2p[b][m2p[b] >= 0]}
+    assert pairs_p2l == {(s, b) for (b, s) in pairs_m2p}
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_tree_deterministic(seed):
+    cfg1, t1 = _tree(256, 2, "uniform", seed % 3)
+    cfg2, t2 = _tree(256, 2, "uniform", seed % 3)
+    assert (np.asarray(t1.perm) == np.asarray(t2.perm)).all()
