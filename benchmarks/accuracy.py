@@ -5,9 +5,9 @@ from __future__ import annotations
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import (FmmConfig, direct_potential, fmm_potential,
-                        rel_error_inf)
+from repro.core import FmmConfig, direct_potential, rel_error_inf
 from repro.data.synthetic import particles
+from repro.solver import FmmSolver
 
 
 def run(n: int = 4096):
@@ -17,7 +17,8 @@ def run(n: int = 4096):
     rows = []
     for p in (5, 9, 13, 17, 21):
         cfg = FmmConfig(n=n, nlevels=3, p=p, dtype="f64")
-        err = rel_error_inf(np.asarray(fmm_potential(z, q, cfg)),
+        solver = FmmSolver.build(cfg, "reference")
+        err = rel_error_inf(np.asarray(solver.apply(z, q)),
                             np.asarray(ref))
         pred = (1 / 3) ** p  # contraction theta/(1+theta) per term
         rows.append((f"accuracy/p={p}", 0.0,

@@ -9,9 +9,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import FmmConfig, direct_potential, fmm_potential
+from repro.core import FmmConfig, direct_potential
 from repro.core.config import num_levels_for
 from repro.data.synthetic import particles
+from repro.solver import FmmSolver
 
 
 def _best(fn, *args, repeats=3):
@@ -33,7 +34,8 @@ def run(p: int = 17):
         z, q = jnp.asarray(z), jnp.asarray(q)
         lv = max(1, num_levels_for(n, 45))
         cfg = FmmConfig(n=n, nlevels=lv, p=p)
-        t_fmm = _best(lambda a, b: fmm_potential(a, b, cfg), z, q)
+        solver = FmmSolver.build(cfg, "auto")
+        t_fmm = _best(solver.apply, z, q)
         t_dir = _best(lambda a, b: direct_potential(a, b, b * 0 + q), z, z)
         rows.append((f"fig5_5/N={n}", t_fmm * 1e6,
                      f"direct={t_dir*1e6:.0f}us ratio={t_dir/t_fmm:.2f}"))

@@ -1,11 +1,15 @@
 """Per-phase FMM timing on the current backend (CPU here; the same jitted
-callables run on TPU). Phases follow the paper's Table 5.1 naming."""
+callables run on TPU). Phases follow the paper's Table 5.1 naming.
+
+``backend`` selects the hot-phase implementations (P2P, M2L, L2P) from
+the ``repro.solver.backends`` registry — "reference" times the core jnp
+sweeps, "pallas" the TPU kernels (interpret mode off-TPU, correctness
+only: interpreted timings are not meaningful)."""
 from __future__ import annotations
 
 import functools
 import time
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -13,6 +17,7 @@ from repro.core import (FmmConfig, build_connectivity, build_tree,
                         leaf_particle_index)
 from repro.core import expansions as E
 from repro.core import fmm as F
+from repro.solver import get_backend
 
 
 def _timed(fn, *args, repeats=3):
@@ -27,9 +32,11 @@ def _timed(fn, *args, repeats=3):
     return best, out
 
 
-def phase_times(z, q, cfg: FmmConfig, repeats: int = 3) -> dict[str, float]:
+def phase_times(z, q, cfg: FmmConfig, repeats: int = 3,
+                backend: str = "reference") -> dict[str, float]:
     """Seconds per phase (best of ``repeats`` post-compile)."""
     times: dict[str, float] = {}
+    be = get_backend(backend, cfg)
 
     build_j = jax.jit(functools.partial(build_tree, cfg=cfg))
     times["sort"], tree = _timed(build_j, z, q, repeats=repeats)
@@ -55,6 +62,10 @@ def phase_times(z, q, cfg: FmmConfig, repeats: int = 3) -> dict[str, float]:
     hm = jnp.asarray(E.m2l_matrix(cfg.p), dtype=cfg.real_dtype)
 
     def all_m2l(tree, conn, mult):
+        if be.m2l is not None:
+            return [be.m2l(mult[l], conn.weak[l], tree.centers[l], cfg,
+                           rho[l])
+                    for l in range(1, cfg.nlevels + 1)]
         return [F.m2l_level(mult[l], conn.weak[l], tree.centers[l], cfg, hm,
                             rho[l])
                 for l in range(1, cfg.nlevels + 1)]
@@ -72,14 +83,18 @@ def phase_times(z, q, cfg: FmmConfig, repeats: int = 3) -> dict[str, float]:
     l2l_j = jax.jit(all_l2l)
     times["l2l"], local = _timed(l2l_j, tree, locs, repeats=repeats)
 
-    idx = jnp.asarray(leaf_particle_index(cfg))
+    idx_np = leaf_particle_index(cfg)
+    idx = jnp.asarray(idx_np)
     if cfg.use_p2l_m2p:
         p2l_j = jax.jit(lambda local, tree, conn: F.p2l_sweep(
             local, tree, conn, cfg, idx, rho[cfg.nlevels]))
         times["p2l"], local = _timed(p2l_j, local, tree, conn,
                                      repeats=repeats)
 
-    l2p_j = jax.jit(lambda local, tree: F.l2p(local, tree, cfg))
+    if be.l2p is not None:
+        l2p_j = jax.jit(lambda local, tree: be.l2p(local, tree, cfg, idx_np))
+    else:
+        l2p_j = jax.jit(lambda local, tree: F.l2p(local, tree, cfg))
     times["l2p"], phi = _timed(l2p_j, local, tree, repeats=repeats)
 
     if cfg.use_p2l_m2p:
@@ -88,7 +103,11 @@ def phase_times(z, q, cfg: FmmConfig, repeats: int = 3) -> dict[str, float]:
         times["m2p"], phi = _timed(m2p_j, phi, mult_leaf, tree, conn,
                                    repeats=repeats)
 
-    p2p_j = jax.jit(lambda phi, tree, conn: F.p2p_sweep(
-        phi, tree, conn, cfg, idx))
+    if be.p2p is not None:
+        p2p_j = jax.jit(lambda phi, tree, conn: phi
+                        + be.p2p(tree, conn, cfg, idx_np))
+    else:
+        p2p_j = jax.jit(lambda phi, tree, conn: F.p2p_sweep(
+            phi, tree, conn, cfg, idx))
     times["p2p"], phi = _timed(p2p_j, phi, tree, conn, repeats=repeats)
     return times

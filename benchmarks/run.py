@@ -18,7 +18,8 @@ def main() -> None:
                     help="smaller N (CI-friendly)")
     args = ap.parse_args()
 
-    from . import accuracy, fig5_2, fig5_3, fig5_5, fig5_8, roofline, table5_1
+    from . import (accuracy, batched, fig5_2, fig5_3, fig5_5, fig5_8,
+                   roofline, table5_1)
 
     quick_kwargs = {
         "table5_1": {"n": 45 * 256},
@@ -27,6 +28,7 @@ def main() -> None:
         "fig5_5": {},
         "fig5_8": {"n": 1 << 13},
         "accuracy": {"n": 2048},
+        "batched": {"n": 1024, "batch": 4},
         "roofline": {},
     }
     benches = {
@@ -36,6 +38,7 @@ def main() -> None:
         "fig5_5": fig5_5.run,
         "fig5_8": fig5_8.run,
         "accuracy": accuracy.run,
+        "batched": batched.run,
         "roofline": roofline.run,
     }
     names = args.only or list(benches)

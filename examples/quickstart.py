@@ -1,5 +1,6 @@
 """Quickstart: evaluate the harmonic potential of 100k particles with the
-adaptive FMM and check it against direct summation on a sample.
+adaptive FMM through the `FmmSolver` front-end and check it against
+direct summation on a sample.
 
     PYTHONPATH=src python examples/quickstart.py [--n 100000] [--p 17]
 """
@@ -15,9 +16,8 @@ jax.config.update("jax_enable_x64", True)  # f64 = the paper's precision
 import jax.numpy as jnp
 
 from repro.configs.fmm2d import fmm_config
-from repro.core import (direct_potential, fmm_potential_checked,
-                        rel_error_inf)
-from repro.data.synthetic import particles
+from repro.core import direct_potential, rel_error_inf
+from repro.solver import FmmSolver
 
 
 def main():
@@ -26,20 +26,31 @@ def main():
     ap.add_argument("--p", type=int, default=17)
     ap.add_argument("--dist", default="normal",
                     choices=["uniform", "normal", "layer"])
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "reference", "pallas"])
     args = ap.parse_args()
 
+    from repro.data.synthetic import particles
     z, q = particles(args.dist, args.n, seed=0)
+    z, q = jnp.asarray(z), jnp.asarray(q)
     cfg = fmm_config(args.n, p=args.p, dtype="f64")
     print(f"[quickstart] N={args.n} ({args.dist}), p={args.p}, "
           f"levels={cfg.nlevels} ({4**cfg.nlevels} leaf boxes)")
 
+    # tune() fits the padded-list caps to this workload (overflow-free,
+    # shrunk padding); build() caches the compiled plan per config.
+    solver = FmmSolver.build(cfg, args.backend).tune(z, q)
+    print(f"[quickstart] tuned caps: strong={solver.cfg.strong_cap} "
+          f"weak={solver.cfg.weak_cap} "
+          f"(from {cfg.strong_cap}/{cfg.weak_cap})")
+
     t0 = time.perf_counter()
-    phi, cfg = fmm_potential_checked(z, q, cfg)
+    phi = solver.apply(z, q)
     phi.block_until_ready()
     t_compile = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    phi, _ = fmm_potential_checked(z, q, cfg)
+    phi = solver.apply(z, q)
     phi.block_until_ready()
     t_run = time.perf_counter() - t0
     print(f"[quickstart] fmm: {t_run*1e3:.0f} ms/eval "

@@ -24,12 +24,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.fmm2d import fmm_config
-from repro.core import fmm_potential
+from repro.solver import FmmSolver
 
 
-def velocity(z, gamma, cfg):
+def velocity(z, gamma, solver):
     """u + iv at each vortex (harmonic-kernel FMM, Biot-Savart in 2D)."""
-    phi = fmm_potential(z, gamma.astype(z.dtype), cfg)
+    phi = solver.apply(z, gamma.astype(z.dtype))
     # phi_i = sum_j G_j/(z_j - z_i);  u - iv = phi/(2 pi i) -> conj
     return jnp.conj(phi / (2j * jnp.pi))
 
@@ -55,21 +55,30 @@ def main():
     z = jnp.asarray(z0)
     g = jnp.asarray(gamma + 0j)
     cfg = fmm_config(args.n, p=args.p)
+    # tune once on the initial layout; the caps keep head-room (margin)
+    # for the advected positions so every step stays on the jit path
+    solver = FmmSolver.build(cfg, "auto").tune(z, g, margin=1.5)
     print(f"[vortex] N={args.n} vortices, {args.steps} RK2 steps, "
-          f"p={args.p}, levels={cfg.nlevels}")
+          f"p={args.p}, levels={cfg.nlevels}, "
+          f"caps={solver.cfg.strong_cap}/{solver.cfg.weak_cap}")
 
     imp0 = complex(np.sum(gamma * z0))
     t0 = time.perf_counter()
     for s in range(args.steps):
-        u1 = velocity(z, g, cfg)
+        u1 = velocity(z, g, solver)
         zm = z + 0.5 * args.dt * u1              # RK2 midpoint
-        u2 = velocity(zm, g, cfg)
+        u2 = velocity(zm, g, solver)
         z = z + args.dt * u2
         if s % 5 == 0 or s == args.steps - 1:
             imp = complex(np.sum(gamma * np.asarray(z)))
             drift = abs(imp - imp0) / max(abs(imp0), 1e-12)
+            # advected positions can drift past the t=0-tuned caps;
+            # overflow would silently drop interactions, so monitor it
+            ov = solver.stats(z, g)["overflow"]
             print(f"[vortex] step {s:3d}  impulse drift {drift:.2e}  "
+                  f"overflow {ov}  "
                   f"({(time.perf_counter()-t0)/(s+1):.2f} s/step avg)")
+            assert ov == 0, "caps overflowed; re-tune with larger margin"
     sep = abs(np.mean(np.asarray(z)[:n2]) - np.mean(np.asarray(z)[n2:]))
     print(f"[vortex] final cluster separation {sep:.3f} (pair translates, "
           f"separation ~const)")

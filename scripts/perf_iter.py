@@ -39,8 +39,7 @@ def main():
     from repro.configs import SHAPES, get_config, get_opt
     from repro.launch.mesh import make_production_mesh
     from repro.launch.steps import build_cell
-    from repro.launch.dryrun import (HW, cost_analysis_dict,
-                                     memory_analysis_dict)
+    from repro.launch.dryrun import cost_analysis_dict, memory_analysis_dict
     from repro.launch.hlo_analysis import collective_bytes_weighted
 
     overrides = dict(kv.split("=", 1) for kv in args.set)

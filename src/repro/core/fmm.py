@@ -20,7 +20,6 @@ from __future__ import annotations
 import functools
 from typing import NamedTuple
 
-import numpy as np
 import jax
 import jax.numpy as jnp
 
@@ -307,11 +306,12 @@ def fmm_build(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> FmmPlan:
 
 
 def fmm_evaluate(plan: FmmPlan, cfg: FmmConfig,
-                 p2p_impl=None, m2l_impl=None) -> jax.Array:
+                 p2p_impl=None, m2l_impl=None, l2p_impl=None) -> jax.Array:
     """Run upward/downward/evaluation on a built plan; returns sorted phi.
 
-    ``p2p_impl`` / ``m2l_impl`` optionally override the near-field and M2L
-    sweeps (used to swap in Pallas kernels).
+    ``p2p_impl`` / ``m2l_impl`` / ``l2p_impl`` optionally override the
+    near-field, M2L and L2P sweeps (used to swap in Pallas kernels; see
+    ``repro.solver.backends`` for the registry that bundles them).
     """
     tree, conn = plan.tree, plan.conn
     mult = upward(tree, cfg)
@@ -321,13 +321,17 @@ def fmm_evaluate(plan: FmmPlan, cfg: FmmConfig,
     else:
         local = downward_with(mult, tree, conn, cfg, m2l_impl)
 
-    phi = l2p(local, tree, cfg)
+    # numpy constant (static layout): kernel wrappers derive shapes from it
+    idx = leaf_particle_index(cfg)
+    if l2p_impl is None:
+        phi = l2p(local, tree, cfg)
+    else:
+        phi = l2p_impl(local, tree, cfg, idx)
     if cfg.use_p2l_m2p:
         phi = m2p_sweep(phi, mult[cfg.nlevels], tree, conn, cfg)
 
-    idx = jnp.asarray(leaf_particle_index(cfg))
     if p2p_impl is None:
-        phi = p2p_sweep(phi, tree, conn, cfg, idx)
+        phi = p2p_sweep(phi, tree, conn, cfg, jnp.asarray(idx))
     else:
         phi = phi + p2p_impl(tree, conn, cfg, idx)
     return phi

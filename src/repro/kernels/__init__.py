@@ -10,6 +10,12 @@ tiling), ops.py (jit'd wrapper with the FMM-pipeline contract) and ref.py
 (pure-jnp oracle). Validated with interpret=True on CPU; TPU is the target.
 The topological phase (sort 30%, connect 1%) intentionally has no kernel:
 sort/scan are XLA:TPU primitives (DESIGN.md §2).
+
+Consumers should not import these wrappers directly for pipeline use:
+the backend registry in ``repro.solver.backends`` bundles them as the
+"pallas" backend (vs the "reference" jnp sweeps) and ``FmmSolver``
+dispatches each phase through it — swap implementations per phase by
+backend name, or register new ones with ``register_backend``.
 """
 from . import common
 from .p2p import p2p_apply, p2p_pallas, p2p_ref

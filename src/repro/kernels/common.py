@@ -13,11 +13,21 @@ from __future__ import annotations
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
 
 
 def default_interpret() -> bool:
     """Pallas interpret mode: True off-TPU (this container is CPU-only)."""
     return jax.default_backend() != "tpu"
+
+
+def compiler_params(**kwargs):
+    """TPU compiler params across jax versions (CompilerParams was named
+    TPUCompilerParams before jax 0.5)."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)
 
 
 def round_up(x: int, m: int) -> int:

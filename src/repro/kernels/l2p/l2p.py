@@ -14,7 +14,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from ..common import compiler_params
 
 
 def _make_kernel(p: int):
@@ -58,7 +59,7 @@ def l2p_pallas(br, bi, tr, ti, *, p: int, interpret: bool = True):
             pl.BlockSpec((1, n_pad), row),
         ],
         out_shape=[jax.ShapeDtypeStruct((nbox, n_pad), dt)] * 2,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

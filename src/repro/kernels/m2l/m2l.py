@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..common import compiler_params
+
 
 def _make_kernel(p: int, P: int):
     def kernel(weak_ref, ar_ref, ai_ref, prer_ref, prei_ref, postr_ref,
@@ -112,7 +114,7 @@ def m2l_pallas(weak: jax.Array, ar, ai, prer, prei, postr, posti, ht, *,
         _make_kernel(p, P),
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((nbox, P), dt)] * 2,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -14,7 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from ..common import compiler_params
 
 
 def _nbody_kernel(tzr, tzi, szr, szi, sqr, sqi, outr, outi):
@@ -67,7 +67,7 @@ def nbody_pallas(tzr, tzi, szr, szi, sqr, sqi, *, t_tile: int = 256,
             pl.BlockSpec((1, t_tile), tmap),
         ],
         out_shape=[jax.ShapeDtypeStruct((nt, t_tile), dt)] * 2,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 import numpy as np
-import jax.numpy as jnp
 
 from ...core.config import FmmConfig
 from ..common import (default_interpret, dense_leaf_arrays, round_up,

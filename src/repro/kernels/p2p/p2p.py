@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..common import compiler_params
+
 
 def _p2p_kernel(lists_ref, tzr, tzi, szr, szi, sqr, sqi, outr, outi):
     s = pl.program_id(1)
@@ -83,7 +85,7 @@ def p2p_pallas(lists: jax.Array, tzr, tzi, szr, szi, sqr, sqi,
         _p2p_kernel,
         grid_spec=grid_spec,
         out_shape=[jax.ShapeDtypeStruct((nbox, n_pad), dt)] * 2,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -27,7 +27,6 @@ import sys
 import time
 import traceback
 
-import numpy as np
 
 HW = {
     "peak_flops_bf16": 197e12,   # per chip, TPU v5e

@@ -9,7 +9,6 @@ we build the computation call graph (while bodies/conditions, fusion
 """
 from __future__ import annotations
 
-import json
 import re
 
 _DTYPE_BYTES = {

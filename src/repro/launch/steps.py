@@ -144,11 +144,8 @@ def train_state_pspecs(cfg: ModelConfig, oc: OptConfig, rules: Rules):
 # step functions
 # ---------------------------------------------------------------------------
 
-def make_train_step(cfg: ModelConfig, oc: OptConfig, *, num_micro: int = 1,
-                    act_seq_shard: bool = True):
+def make_train_step(cfg: ModelConfig, oc: OptConfig, *, num_micro: int = 1):
     """(state, batch) -> (state, metrics); microbatch scan inside."""
-
-    act_spec = PS(None, "model", None) if act_seq_shard else None
 
     def loss_fn(params, batch):
         return lm.forward_loss(params, batch, cfg)

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
 
 
 def main(argv=None):
@@ -44,7 +43,7 @@ def main(argv=None):
                                   train_loop)
     from ..launch.steps import make_train_step
     from ..models import lm
-    from ..optim import OptConfig, init_opt_state
+    from ..optim import init_opt_state
     import dataclasses
     import jax.numpy as jnp
 

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .common import ParamDef, norm_defs, apply_norm, rms_norm, rope
+from .common import ParamDef, norm_defs, rms_norm, rope
 
 NEG = -1e30
 
@@ -131,7 +131,8 @@ def dense_attention(q, k, v, q_pos, k_pos, causal: bool):
     # shard the f32 score tensor over "model": merged (KV*g) head dim when
     # it divides TP (most archs), else the q-sequence dim (arctic's 56
     # heads, whisper's 12)
-    mesh = jax.sharding.get_abstract_mesh()
+    from ..parallel.sharding import active_mesh
+    mesh = active_mesh()
     tp = dict(zip(mesh.axis_names, mesh.axis_sizes)).get("model", 1) \
         if mesh is not None and not mesh.empty else 1
     if H % max(tp, 1) == 0:

@@ -12,7 +12,6 @@ Layers are stacked on a leading "layers" axis and executed with
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

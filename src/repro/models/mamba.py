@@ -103,10 +103,8 @@ def mamba_apply_state(p, x, cfg):
 
 def mamba_decode_step(p, x, conv_state, h, cfg):
     """One-token decode. x: (B,1,D); conv_state: (B, K-1, di); h: (B,di,n)."""
-    B = x.shape[0]
     xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
     xin, z = jnp.split(xz, 2, axis=-1)                    # (B,1,di)
-    K = cfg.d_conv
     window = jnp.concatenate([conv_state, xin[:, 0:1, :]], axis=1)  # (B,K,di)
     xc = jax.nn.silu((window * p["conv_w"][None]).sum(axis=1, keepdims=True)
                      + p["conv_b"])

@@ -20,6 +20,21 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
 
+def _shard_map(f, mesh, in_specs, out_specs, manual_axes):
+    """shard_map manual over ``manual_axes`` only, across jax versions
+    (jax.shard_map/axis_names/check_vma landed in 0.5; 0.4 spells it
+    experimental shard_map with auto= the complement and check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs,
+                             axis_names=frozenset(manual_axes),
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False, auto=auto)
+
+
 def quantize_int8(x):
     """Per-tensor symmetric int8. Returns (q, scale)."""
     amax = jnp.max(jnp.abs(x))
@@ -79,11 +94,10 @@ def make_compressed_value_and_grad(loss_fn, mesh):
     """
     def vg(params, batch, errors):
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            _shard_map, mesh=mesh,
             in_specs=(PS(), PS("pod"), PS("pod")),
             out_specs=(PS(), PS(), PS("pod")),
-            axis_names=frozenset({"pod"}),
-            check_vma=False,
+            manual_axes=("pod",),
         )
         def inner(p, local_batch, err):
             loss, grads = jax.value_and_grad(loss_fn)(p, local_batch)

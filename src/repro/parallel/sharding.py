@@ -56,6 +56,18 @@ class Rules:
 ACT_DP = ("pod", "data")   # data axes for activation batch dims
 
 
+def active_mesh():
+    """The mesh whose axes sharding constraints may reference, or None.
+
+    Version compat: jax >= 0.5 exposes the (abstract) mesh context via
+    jax.sharding.get_abstract_mesh(); on jax < 0.5 the ``with mesh:``
+    context lives in thread_resources."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src.mesh import thread_resources
+    return thread_resources.env.physical_mesh
+
+
 def maybe_shard(x, spec: PS):
     """with_sharding_constraint that degrades gracefully:
 
@@ -70,7 +82,7 @@ def maybe_shard(x, spec: PS):
     always spell out the data axes on batch dims (this was a measured
     16x activation-memory bug, see EXPERIMENTS.md §Perf).
     """
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = active_mesh()
     if mesh is None or mesh.empty:
         return x
     names = set(mesh.axis_names)

@@ -1,0 +1,18 @@
+"""Unified FMM solver front-end: plan caching, per-phase backend
+dispatch, batched multi-problem evaluation, and cap autotuning.
+
+    from repro.solver import FmmSolver
+    solver = FmmSolver.build(cfg, backend="auto").tune(z_sample)
+    phi = solver.apply(z, q)
+    phib = solver.apply_batched(zb, qb)
+"""
+from .autotune import TuneResult, probe_caps, tune_caps
+from .backends import (Backend, available_backends, get_backend,
+                       register_backend)
+from .solver import FmmSolver
+
+__all__ = [
+    "FmmSolver",
+    "Backend", "available_backends", "get_backend", "register_backend",
+    "TuneResult", "probe_caps", "tune_caps",
+]

@@ -1,0 +1,106 @@
+"""Cap autotuning: fit the padded-list budgets to the workload.
+
+The connectivity lists are padded to static caps (``strong_cap`` /
+``weak_cap``) so every shape is compile-time constant — the paper's
+central design point. The caps are therefore a *performance* parameter:
+too small and interactions overflow (dropped -> wrong answer, caught by
+``Connectivity.overflow``); too large and every sweep pays for dead
+padding. Holm, Engblom, Goude & Holmgren (arXiv:1311.1006) make the case
+that such parameters should be tuned per workload at runtime rather than
+hard-coded; this module is that idea for the TPU port.
+
+``tune_caps`` runs the cheap topological phase (sort + connect, ~31% of
+one evaluation) a handful of times on a sample of the workload:
+
+  1. *grow*: double ``strong_cap`` until nothing overflows;
+  2. *shrink*: read the actual per-box occupancy maxima from the
+     overflow-free build and re-pad to ``margin`` times that, rounded up
+     to ``round_to`` (lane-friendly);
+  3. *verify*: one final build confirms ``overflow == 0`` at the shrunk
+     caps.
+
+A 2-D sample ``(B, N)`` tunes a shared cap budget across all B problems
+(the ``apply_batched`` serving shape): caps are sized to the worst row.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.config import FmmConfig
+from ..core.connectivity import connectivity_stats
+from ..core.fmm import fmm_build
+
+
+class TuneResult(NamedTuple):
+    """Outcome of a cap-tuning run."""
+
+    cfg: FmmConfig          # tuned config (overflow-free on the sample)
+    stats: dict             # connectivity stats at the tuned caps
+    trials: list            # [(strong_cap, weak_cap, overflow), ...]
+
+
+def _round_up(x: int, m: int) -> int:
+    return max(m, (x + m - 1) // m * m)
+
+
+def probe_caps(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> tuple[int, dict]:
+    """Build tree+connectivity once; return (overflow, stats).
+
+    ``z``/``q`` may be ``(N,)`` for one problem or ``(B, N)`` for a batch
+    sharing one cap budget — stats then aggregate the worst row.
+    """
+    if z.ndim == 1:
+        z, q = z[None], q[None]
+    overflow, stats = 0, None
+    for b in range(z.shape[0]):
+        plan = fmm_build(z[b], q[b], cfg)
+        s = connectivity_stats(jax.device_get(plan.conn))
+        overflow = max(overflow, s["overflow"])
+        if stats is None:
+            stats = s
+        else:
+            stats = {k: max(stats[k], s[k]) for k in stats}
+    return overflow, stats
+
+
+def tune_caps(z: jax.Array, q: jax.Array | None, cfg: FmmConfig, *,
+              margin: float = 1.25, round_to: int = 8,
+              max_grow: int = 6) -> TuneResult:
+    """Fit ``strong_cap``/``weak_cap`` to the sample; see module docstring.
+
+    ``margin`` head-room (>= 1) absorbs drift between the tuning sample
+    and production inputs; ``round_to`` keeps caps lane-friendly.
+    """
+    if margin < 1.0:
+        raise ValueError("margin must be >= 1")
+    z = jnp.asarray(z)
+    q = jnp.ones(z.shape, cfg.complex_dtype) if q is None else jnp.asarray(q)
+
+    trials: list = []
+    cur = cfg
+    for attempt in range(max_grow + 1):
+        overflow, stats = probe_caps(z, q, cur)
+        trials.append((cur.strong_cap, cur.weak_cap, overflow))
+        if overflow == 0:
+            break
+        if attempt == max_grow:
+            raise RuntimeError(
+                f"connectivity still overflows by {overflow} at "
+                f"strong_cap={cur.strong_cap} (after {max_grow} doublings); "
+                "the sample distribution defeats the theta-criterion caps")
+        cur = dataclasses.replace(cur, strong_cap=2 * cur.strong_cap,
+                                  weak_cap=0)  # 0 -> 4*strong (post_init)
+
+    strong = _round_up(int(stats["strong_max"] * margin), round_to)
+    weak = _round_up(int(stats["weak_max"] * margin), round_to)
+    tuned = dataclasses.replace(cur, strong_cap=strong, weak_cap=weak)
+
+    overflow, stats = probe_caps(z, q, tuned)
+    trials.append((tuned.strong_cap, tuned.weak_cap, overflow))
+    if overflow != 0:  # cannot happen: caps >= measured maxima
+        raise RuntimeError("tuned caps overflow; file a bug")
+    return TuneResult(cfg=tuned, stats=stats, trials=trials)

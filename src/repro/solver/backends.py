@@ -1,0 +1,120 @@
+"""Per-phase backend registry for the FMM hot paths.
+
+The pipeline in ``repro.core.fmm`` exposes three override hooks — the
+near-field P2P sweep, the level M2L translation, and the leaf L2P
+evaluation (together ~56% of the paper's GPU runtime, Table 5.1). A
+``Backend`` bundles one implementation per hook; the registry maps names
+to backends so callers (``FmmSolver``, benchmarks, tests) pick by string:
+
+  "reference"  pure-jnp oracles from ``repro.core.fmm`` (every hook None
+               -> the core path runs its own sweep)
+  "pallas"     the Pallas TPU kernels from ``repro.kernels`` (interpret
+               mode off-TPU); harmonic kernel only
+  "auto"       "pallas" on a TPU backend for harmonic-kernel configs,
+               "reference" otherwise — interpret-mode Pallas on CPU is a
+               correctness tool, not a fast path
+
+Third parties register additional backends with ``register_backend`` —
+e.g. a shard_map multi-chip variant — without touching the dispatch
+sites.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+
+from ..core.config import FmmConfig
+
+# Hook signatures (matching repro.core.fmm.fmm_evaluate):
+#   p2p(tree, conn, cfg, idx)            -> (n,) complex contribution
+#   m2l(mult, weak, centers, cfg, rho)   -> (nbox, p+1) complex
+#   l2p(local, tree, cfg, idx)           -> (n,) complex
+PhaseImpl = Optional[Callable]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """Named bundle of per-phase implementations (None -> core jnp path).
+
+    ``vmap_safe`` marks whether the hooks may be wrapped in ``jax.vmap``
+    for ``FmmSolver.apply_batched``; the Pallas scalar-prefetch grids do
+    not batch, so the batched path falls back to the reference sweeps
+    when this is False.
+    ``supports(cfg)`` gates dispatch (the Pallas kernels implement only
+    the paper's harmonic kernel).
+    """
+
+    name: str
+    p2p: PhaseImpl = None
+    m2l: PhaseImpl = None
+    l2p: PhaseImpl = None
+    vmap_safe: bool = True
+
+    def supports(self, cfg: FmmConfig) -> bool:
+        if self.name == "pallas":
+            return cfg.kernel == "harmonic"
+        return True
+
+    def phase_impls(self, cfg: FmmConfig) -> dict:
+        """kwargs for ``fmm_evaluate`` selecting this backend's hooks."""
+        return {"p2p_impl": self.p2p, "m2l_impl": self.m2l,
+                "l2p_impl": self.l2p}
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    """Register (or replace) a backend under ``backend.name``."""
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def available_backends() -> list[str]:
+    return sorted(_REGISTRY) + ["auto"]
+
+
+def get_backend(name: str, cfg: FmmConfig | None = None) -> Backend:
+    """Resolve a backend name ("auto" needs ``cfg`` to pick per-config)."""
+    if name == "auto":
+        return _resolve_auto(cfg)
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def _resolve_auto(cfg: FmmConfig | None) -> Backend:
+    pallas = _REGISTRY["pallas"]
+    if (cfg is not None and pallas.supports(cfg)
+            and jax.default_backend() == "tpu"):
+        return pallas
+    return _REGISTRY["reference"]
+
+
+def _make_reference() -> Backend:
+    return Backend(name="reference")
+
+
+def _make_pallas() -> Backend:
+    from ..kernels import l2p_apply, m2l_level_apply, p2p_apply
+
+    def p2p(tree, conn, cfg, idx):
+        return p2p_apply(tree, conn, cfg, idx)
+
+    def m2l(mult, weak, centers, cfg, rho):
+        return m2l_level_apply(mult, weak, centers, cfg, rho)
+
+    def l2p(local, tree, cfg, idx):
+        return l2p_apply(local, tree, cfg, idx)
+
+    return Backend(name="pallas", p2p=p2p, m2l=m2l, l2p=l2p,
+                   vmap_safe=False)
+
+
+register_backend(_make_reference())
+register_backend(_make_pallas())

@@ -1,0 +1,171 @@
+"""`FmmSolver` — the production front-end over the FMM pipeline.
+
+One object wraps the whole paper pipeline (sort + connect + upward +
+downward + evaluate) behind a jit-able entry point:
+
+    solver = FmmSolver.build(cfg, backend="auto")   # cached per config
+    phi = solver.apply(z, q)                        # one problem
+    phib = solver.apply_batched(zb, qb)             # (B, N) -> (B, N)
+    solver = solver.tune(z_sample)                  # fit the list caps
+
+``build`` memoizes solvers by ``(FmmConfig, backend)`` so repeated calls
+share one compiled program — the plan cache. ``apply_batched`` vmaps the
+single-problem pipeline over a leading batch axis: because *all*
+adaptivity lives in the contents of statically-shaped padded lists,
+B independent problems of the same config are one XLA program with a
+batch dimension — the "millions of users" serving shape. The batch
+shares one connectivity-cap budget; size it with ``tune`` on a 2-D
+sample.
+
+Backends (``repro.solver.backends``) swap the hot phases between the
+Pallas TPU kernels and the pure-jnp reference sweeps per phase.
+"""
+from __future__ import annotations
+
+import copy
+from collections import OrderedDict
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.config import FmmConfig
+from ..core.connectivity import connectivity_stats
+from ..core.fmm import FmmPlan, fmm_build, fmm_evaluate
+from .autotune import TuneResult, tune_caps
+from .backends import Backend, get_backend
+
+# LRU of compiled solvers, keyed by (cfg, resolved backend name) — so
+# "auto" shares the entry of whatever backend it resolves to. Bounded:
+# per-workload tuning in a long-lived service mints fresh configs, and
+# each solver pins two compiled XLA programs. Evicted instances stay
+# usable by existing holders; only the cache forgets them.
+_CACHE: OrderedDict = OrderedDict()
+_CACHE_MAX = 64
+
+
+class FmmSolver:
+    """Compiled FMM evaluator for one ``FmmConfig`` + backend choice.
+
+    Prefer ``FmmSolver.build`` over the constructor: ``build`` returns
+    the cached instance (and its already-compiled XLA program) for a
+    config seen before.
+    """
+
+    def __init__(self, cfg: FmmConfig, backend: str = "auto"):
+        self.cfg = cfg
+        self.backend_name = backend
+        self.backend: Backend = get_backend(backend, cfg)
+        if not self.backend.supports(cfg):
+            raise NotImplementedError(
+                f"backend {self.backend.name!r} does not support "
+                f"kernel={cfg.kernel!r}")
+        self._impls = self.backend.phase_impls(cfg)
+        # Batched path: scalar-prefetch Pallas grids don't batch, so a
+        # non-vmap-safe backend serves batches through the reference
+        # sweeps (same answer, jnp path).
+        batched_impls = (self._impls if self.backend.vmap_safe
+                         else get_backend("reference").phase_impls(cfg))
+        self._apply = jax.jit(self._make_core(self._impls))
+        self._apply_batched = jax.jit(jax.vmap(self._make_core(batched_impls)))
+        self.tune_result: Optional[TuneResult] = None
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(cls, cfg: FmmConfig, backend: str = "auto") -> "FmmSolver":
+        """Cached constructor: one solver (and compiled plan) per
+        ``(cfg, resolved backend)``."""
+        key = (cfg, get_backend(backend, cfg).name)
+        solver = _CACHE.get(key)
+        if solver is None:
+            solver = _CACHE[key] = cls(cfg, backend)
+            while len(_CACHE) > _CACHE_MAX:
+                _CACHE.popitem(last=False)
+        else:
+            _CACHE.move_to_end(key)
+        return solver
+
+    @classmethod
+    def cache_clear(cls) -> None:
+        _CACHE.clear()
+
+    @classmethod
+    def cache_size(cls) -> int:
+        return len(_CACHE)
+
+    def _make_core(self, impls: dict):
+        cfg = self.cfg
+
+        def core(z: jax.Array, q: jax.Array) -> jax.Array:
+            plan = fmm_build(z, q, cfg)
+            phi_sorted = fmm_evaluate(plan, cfg, **impls)
+            out = jnp.zeros_like(phi_sorted)
+            return out.at[plan.tree.perm].set(phi_sorted)
+
+        return core
+
+    # -- evaluation ---------------------------------------------------------
+
+    def apply(self, z: jax.Array, q: jax.Array) -> jax.Array:
+        """phi_i = sum_{j != i} G(z_i, x_j) for one problem; input order.
+
+        Trusts the caps (pure jit path): an input whose interaction
+        lists exceed ``strong_cap``/``weak_cap`` silently drops
+        interactions. Size the caps with ``tune`` on a representative
+        sample, and use ``apply_checked`` (or monitor ``stats``) when
+        production inputs may drift from it.
+        """
+        return self._apply(z, q)
+
+    def apply_checked(self, z: jax.Array, q: jax.Array) -> jax.Array:
+        """``apply`` plus cap-overflow validation (one extra eager
+        topological build). Raises RuntimeError instead of silently
+        dropping interactions when the input exceeds the caps."""
+        stats = self.stats(z, q)
+        if stats["overflow"]:
+            raise RuntimeError(
+                f"connectivity caps overflow by {stats['overflow']} "
+                f"(strong_cap={self.cfg.strong_cap}, "
+                f"weak_cap={self.cfg.weak_cap}); re-tune on this workload")
+        return self._apply(z, q)
+
+    def apply_batched(self, z: jax.Array, q: jax.Array) -> jax.Array:
+        """Evaluate B independent problems in one call.
+
+        ``z``/``q``: (B, N) with the same ``FmmConfig`` (one shared cap
+        budget). Returns (B, N) potentials, each row in its input order.
+        """
+        if z.ndim != 2:
+            raise ValueError(f"apply_batched wants (B, N); got {z.shape}")
+        if z.shape[-1] != self.cfg.n:
+            raise ValueError(f"N={z.shape[-1]} != cfg.n={self.cfg.n}")
+        return self._apply_batched(z, q)
+
+    def plan(self, z: jax.Array, q: jax.Array) -> FmmPlan:
+        """Topological phase only (tree + connectivity) for inspection."""
+        return fmm_build(z, q, self.cfg)
+
+    def stats(self, z: jax.Array, q: jax.Array) -> dict:
+        """Connectivity stats (incl. ``overflow``) for one problem."""
+        return connectivity_stats(jax.device_get(self.plan(z, q).conn))
+
+    # -- autotuning ---------------------------------------------------------
+
+    def tune(self, z_sample: jax.Array, q_sample: jax.Array | None = None,
+             *, margin: float = 1.25, round_to: int = 8,
+             max_grow: int = 6) -> "FmmSolver":
+        """Fit ``strong_cap``/``weak_cap`` to a workload sample.
+
+        ``z_sample`` may be (N,) or (B, N) — a batch tunes the shared cap
+        budget to its worst row. Returns the (cached) solver for the
+        tuned config, with ``tune_result`` attached.
+        """
+        result = tune_caps(z_sample, q_sample, self.cfg, margin=margin,
+                           round_to=round_to, max_grow=max_grow)
+        # Shallow copy: shares the cached compiled programs but carries
+        # this caller's tune_result — concurrent tuners that land on the
+        # same tuned config must not clobber each other's stats.
+        tuned = copy.copy(FmmSolver.build(result.cfg, self.backend_name))
+        tuned.tune_result = result
+        return tuned

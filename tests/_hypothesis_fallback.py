@@ -1,0 +1,62 @@
+"""Graceful degrade when the `hypothesis` library is absent.
+
+The property tests import ``given``/``settings``/``st`` from here instead
+of from ``hypothesis`` directly. With hypothesis installed (the CI
+``[test]`` extra) they run as real property tests; without it, a minimal
+fixed-seed sampler replays a handful of deterministic examples per test
+— a smoke net rather than a collection error, covering exactly the
+strategy subset this suite uses (``st.integers``, ``st.floats``).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    import numpy as np
+
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo: int, hi: int) -> _Strategy:
+            return _Strategy(lambda rng: int(rng.integers(lo, hi + 1)))
+
+        @staticmethod
+        def floats(lo: float, hi: float) -> _Strategy:
+            return _Strategy(lambda rng: float(rng.uniform(lo, hi)))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = _FALLBACK_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = min(max_examples, _FALLBACK_EXAMPLES)
+            return fn
+
+        return deco
+
+    def given(*strategies: _Strategy):
+        def deco(fn):
+            # NB: zero-arg wrapper (no functools.wraps) — pytest must not
+            # see the strategy-supplied parameters as fixture requests.
+            def wrapper():
+                rng = np.random.default_rng(0)
+                for _ in range(getattr(wrapper, "_max_examples",
+                                       _FALLBACK_EXAMPLES)):
+                    fn(*(s.sample(rng) for s in strategies))
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

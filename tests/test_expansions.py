@@ -3,7 +3,7 @@ scaled-Horner forms vs direct evaluation, plus composition properties."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.core import expansions as E
 

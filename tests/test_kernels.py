@@ -10,8 +10,8 @@ from repro.core import (FmmConfig, fmm_build, fmm_evaluate,
 from repro.core import expansions as E
 from repro.data.synthetic import particles
 from repro.kernels import (l2p_apply, l2p_pallas, l2p_ref, m2l_level_apply,
-                           m2l_pallas, m2l_ref, nbody_direct, nbody_pallas,
-                           nbody_ref, p2p_apply, p2p_pallas, p2p_ref)
+                           nbody_direct, nbody_ref, p2p_apply, p2p_pallas,
+                           p2p_ref)
 from repro.kernels.common import dense_leaf_arrays, round_up
 
 RNG = np.random.default_rng(7)

@@ -3,7 +3,6 @@ config registry, batch specs."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as PS
 
 from repro.configs import ARCH_NAMES, SHAPES, applicable, get_config, get_opt

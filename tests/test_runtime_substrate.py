@@ -9,7 +9,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.checkpoint import (CheckpointManager, latest_step,
                               restore_checkpoint, save_checkpoint)

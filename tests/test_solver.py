@@ -1,0 +1,175 @@
+"""FmmSolver front-end: plan caching, backend dispatch, batched
+evaluation vs a per-problem loop, and cap autotuning."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import FmmConfig, fmm_potential
+from repro.data.synthetic import particles
+from repro.solver import (FmmSolver, available_backends, get_backend,
+                          probe_caps, tune_caps)
+
+CFG64 = FmmConfig(n=256, nlevels=2, p=10, dtype="f64")
+
+
+def _batch(b, n, dist="uniform", seed0=0):
+    zs, qs = [], []
+    for i in range(b):
+        z, q = particles(dist, n, seed0 + i)
+        zs.append(np.asarray(z))
+        qs.append(np.asarray(q))
+    return jnp.asarray(np.stack(zs)), jnp.asarray(np.stack(qs))
+
+
+# ---------------------------------------------------------------------------
+# single-problem apply + plan cache
+# ---------------------------------------------------------------------------
+
+def test_apply_matches_fmm_potential():
+    z, q = particles("normal", CFG64.n, 3)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+    solver = FmmSolver.build(CFG64, "reference")
+    np.testing.assert_allclose(np.asarray(solver.apply(z, q)),
+                               np.asarray(fmm_potential(z, q, CFG64)),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_build_is_cached_per_config_and_backend():
+    a = FmmSolver.build(CFG64, "reference")
+    assert FmmSolver.build(CFG64, "reference") is a
+    # "auto" shares the cache entry of whatever backend it resolves to
+    # (reference on CPU: interpret-mode pallas is not a fast path)
+    resolved = get_backend("auto", CFG64).name
+    assert (FmmSolver.build(CFG64, "auto") is a) == (resolved == "reference")
+    import dataclasses
+    other = dataclasses.replace(CFG64, p=CFG64.p + 1)
+    assert FmmSolver.build(other, "reference") is not a
+
+
+def test_apply_checked_raises_on_overflow():
+    import dataclasses
+    tiny = dataclasses.replace(CFG64, strong_cap=2, weak_cap=2)
+    z, q = particles("normal", CFG64.n, 5)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+    solver = FmmSolver(tiny, "reference")
+    with pytest.raises(RuntimeError, match="overflow"):
+        solver.apply_checked(z, q)
+    # ...while on an in-cap input it returns the plain-apply answer
+    ok = FmmSolver.build(CFG64, "reference")
+    np.testing.assert_array_equal(np.asarray(ok.apply_checked(z, q)),
+                                  np.asarray(ok.apply(z, q)))
+
+
+def test_unknown_backend_raises():
+    with pytest.raises(KeyError):
+        FmmSolver.build(CFG64, "cuda")
+    assert set(available_backends()) >= {"reference", "pallas", "auto"}
+
+
+def test_pallas_backend_rejects_log_kernel():
+    cfg = FmmConfig(n=64, nlevels=1, p=6, kernel="log", dtype="f64")
+    with pytest.raises(NotImplementedError):
+        FmmSolver(cfg, "pallas")
+    # "auto" must dispatch log-kernel configs somewhere that supports them
+    assert get_backend("auto", cfg).supports(cfg)
+
+
+# ---------------------------------------------------------------------------
+# batched evaluation
+# ---------------------------------------------------------------------------
+
+def test_apply_batched_matches_per_problem_loop():
+    B = 8
+    solver = FmmSolver.build(CFG64, "reference")
+    zb, qb = _batch(B, CFG64.n)
+    got = np.asarray(solver.apply_batched(zb, qb))
+    ref = np.stack([np.asarray(solver.apply(zb[i], qb[i]))
+                    for i in range(B)])
+    scale = np.abs(ref).max()
+    assert np.abs(got - ref).max() / scale < 1e-6
+    # and each row is a genuinely different problem
+    assert np.abs(got[0] - got[1]).max() / scale > 1e-3
+
+
+def test_apply_batched_shape_validation():
+    solver = FmmSolver.build(CFG64, "reference")
+    z, q = _batch(2, CFG64.n)
+    with pytest.raises(ValueError):
+        solver.apply_batched(z[0], q[0])
+    with pytest.raises(ValueError):
+        solver.apply_batched(z[:, :100], q[:, :100])
+
+
+def test_apply_batched_pallas_backend_falls_back_to_reference():
+    """Scalar-prefetch Pallas grids don't vmap; the batched entry of a
+    pallas solver must still produce reference-grade answers."""
+    cfg = FmmConfig(n=256, nlevels=2, p=8, dtype="f32",
+                    strong_cap=40, weak_cap=64)
+    zb, qb = _batch(2, cfg.n, dist="normal")
+    got = np.asarray(FmmSolver.build(cfg, "pallas").apply_batched(zb, qb))
+    ref = np.asarray(FmmSolver.build(cfg, "reference").apply_batched(zb, qb))
+    np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# backend agreement: pallas (interpret) vs reference
+# ---------------------------------------------------------------------------
+
+def test_pallas_and_reference_backends_agree():
+    cfg = FmmConfig(n=512, nlevels=2, p=8, dtype="f32",
+                    strong_cap=40, weak_cap=64)
+    z, q = particles("normal", cfg.n, 11)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+    ref = np.asarray(FmmSolver.build(cfg, "reference").apply(z, q))
+    got = np.asarray(FmmSolver.build(cfg, "pallas").apply(z, q))
+    scale = np.abs(ref).max()
+    assert np.abs(got - ref).max() / scale < 5e-4  # f32 kernel tolerance
+
+
+# ---------------------------------------------------------------------------
+# cap autotuning
+# ---------------------------------------------------------------------------
+
+def test_tune_returns_overflow_free_shrunk_caps():
+    solver = FmmSolver.build(CFG64, "reference")
+    zb, qb = _batch(4, CFG64.n)
+    tuned = solver.tune(zb, qb)
+    res = tuned.tune_result
+    assert res.stats["overflow"] == 0
+    assert res.trials[-1][2] == 0
+    # generous seed caps (48/192) shrink to the workload
+    assert tuned.cfg.strong_cap <= CFG64.strong_cap
+    assert tuned.cfg.weak_cap <= CFG64.weak_cap
+    assert tuned.cfg.strong_cap >= res.stats["strong_max"]
+    assert tuned.cfg.weak_cap >= res.stats["weak_max"]
+    # tuned solver computes the same answer
+    np.testing.assert_allclose(np.asarray(tuned.apply(zb[0], qb[0])),
+                               np.asarray(solver.apply(zb[0], qb[0])),
+                               rtol=1e-10, atol=1e-10)
+
+
+def test_tune_grows_undersized_caps():
+    import dataclasses
+    tiny = dataclasses.replace(CFG64, strong_cap=2, weak_cap=2)
+    z, q = particles("normal", CFG64.n, 5)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+    assert probe_caps(z, q, tiny)[0] > 0  # genuinely undersized
+    res = tune_caps(z, q, tiny)
+    assert res.stats["overflow"] == 0
+    assert res.cfg.strong_cap > tiny.strong_cap
+    # growth trials were recorded before the overflow-free shrink
+    assert any(t[2] > 0 for t in res.trials)
+
+
+def test_tune_unsorts_margin_validation():
+    with pytest.raises(ValueError):
+        tune_caps(jnp.zeros(4), None, CFG64, margin=0.5)
+
+
+def test_solver_stats_reports_overflow_scalar():
+    z, q = particles("uniform", CFG64.n, 1)
+    stats = FmmSolver.build(CFG64, "reference").stats(jnp.asarray(z),
+                                                      jnp.asarray(q))
+    assert stats["overflow"] == 0
+    assert stats["p2p_pairs"] > 0

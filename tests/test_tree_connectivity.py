@@ -3,7 +3,7 @@ theta-criterion completeness (every pair covered exactly once)."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_fallback import given, settings, st
 
 from repro.core import (FmmConfig, build_connectivity, build_tree,
                         leaf_ids, leaf_particle_index)
