@@ -3,8 +3,11 @@ callables run on TPU). Phases follow the paper's Table 5.1 naming.
 
 ``backend`` selects the hot-phase implementations (P2P, M2L, L2P) from
 the ``repro.solver.backends`` registry — "reference" times the core jnp
-sweeps, "pallas" the TPU kernels (interpret mode off-TPU, correctness
-only: interpreted timings are not meaningful)."""
+sweeps, "pallas" the TPU kernels. Off-TPU the Pallas kernels run in
+*interpret* mode — a correctness tool whose timings say nothing about
+the compiled kernels — so timing the pallas backend there is refused
+unless ``allow_interpret=True`` explicitly opts into the noise (the
+returned dict then carries an ``"interpreted"`` marker key)."""
 from __future__ import annotations
 
 import functools
@@ -17,6 +20,7 @@ from repro.core import (FmmConfig, build_connectivity, build_tree,
                         leaf_particle_index)
 from repro.core import expansions as E
 from repro.core import fmm as F
+from repro.kernels.common import default_interpret
 from repro.solver import get_backend
 
 
@@ -33,10 +37,23 @@ def _timed(fn, *args, repeats=3):
 
 
 def phase_times(z, q, cfg: FmmConfig, repeats: int = 3,
-                backend: str = "reference") -> dict[str, float]:
+                backend: str = "reference",
+                allow_interpret: bool = False) -> dict[str, float]:
     """Seconds per phase (best of ``repeats`` post-compile)."""
     times: dict[str, float] = {}
     be = get_backend(backend, cfg)
+    interpreted = be.name == "pallas" and default_interpret()
+    if interpreted and not allow_interpret:
+        raise RuntimeError(
+            "refusing to time the pallas backend in interpret mode "
+            "(off-TPU): interpreted timings measure the Pallas "
+            "interpreter, not the kernels. Run on a TPU, use "
+            "backend='reference', or pass allow_interpret=True to get "
+            "annotated noise.")
+    if interpreted:
+        # annotation only: zero seconds so consumers that aggregate the
+        # dict (sum of phase times, percentage rows) are unperturbed
+        times["interpreted"] = 0.0
 
     build_j = jax.jit(functools.partial(build_tree, cfg=cfg))
     times["sort"], tree = _timed(build_j, z, q, repeats=repeats)
@@ -62,6 +79,9 @@ def phase_times(z, q, cfg: FmmConfig, repeats: int = 3,
     hm = jnp.asarray(E.m2l_matrix(cfg.p), dtype=cfg.real_dtype)
 
     def all_m2l(tree, conn, mult):
+        if be.m2l_fused is not None:
+            # single launch covering every level (downward_fused path)
+            return be.m2l_fused(mult, conn.weak, tree.centers, cfg, rho)
         if be.m2l is not None:
             return [be.m2l(mult[l], conn.weak[l], tree.centers[l], cfg,
                            rho[l])

@@ -1,0 +1,72 @@
+"""Kernel-level tiling sweep: time the P2P and M2L Pallas kernels across
+``tile_boxes`` (and ``stage_width``) to document the multi-box tiling win
+and seed the autotuner defaults (``repro.solver.autotune.tune_tiles``).
+
+On a TPU this measures the compiled kernels; off-TPU the kernels run in
+interpret mode and every row is annotated ``interpret=True`` — those
+numbers time the Pallas interpreter, not the hardware, and exist only so
+the harness (shapes, sweep, CSV/JSON plumbing) is exercised in CI.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fmm_build, leaf_particle_index
+from repro.core.fmm import effective_radii, upward
+from repro.data.synthetic import particles
+from repro.kernels import m2l_fused_apply, p2p_apply
+from repro.kernels.common import default_interpret
+
+TILES = (1, 2, 4, 8, 16)
+STAGES = (1, 2)
+
+
+def _best_of(fn, repeats=3):
+    jax.block_until_ready(fn())            # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n: int = 1 << 14, p: int = 8, repeats: int = 3):
+    import dataclasses
+
+    from repro.configs.fmm2d import fmm_config
+
+    base = fmm_config(n, p=p, dtype="f32")
+    z, q = particles("normal", n, 7)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+    interp = default_interpret()
+    note = f"interpret={interp}"
+
+    plan = fmm_build(z, q, base)
+    idx = leaf_particle_index(base)
+    rho = effective_radii(plan.tree, base)
+    mult = upward(plan.tree, base, rho)
+
+    for tb in TILES:
+        if tb > base.nboxes:
+            continue
+        for sw in STAGES:
+            cfg = dataclasses.replace(base, tile_boxes=tb, stage_width=sw)
+
+            def p2p():
+                return p2p_apply(plan.tree, plan.conn, cfg, idx)
+
+            t = _best_of(p2p, repeats)
+            yield (f"kernel_tiles.p2p.tb{tb}.sw{sw}", t * 1e6,
+                   f"n={n} {note}")
+
+            def m2l():
+                return m2l_fused_apply(mult, plan.conn.weak,
+                                       plan.tree.centers, cfg, rho)
+
+            t = _best_of(m2l, repeats)
+            yield (f"kernel_tiles.m2l.tb{tb}.sw{sw}", t * 1e6,
+                   f"n={n} levels={base.nlevels} {note}")

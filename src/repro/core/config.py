@@ -45,6 +45,16 @@ class FmmConfig:
         baseline).
       use_p2l_m2p: enable the leaf-level swapped-theta reclassification
         (paper §2: Carrier-Greengard optimization). Off -> plain P2P.
+      tile_boxes: target boxes per Pallas kernel block (DESIGN.md §2). The
+        P2P/M2L/L2P kernels process (tile_boxes, n_pad)/(tile_boxes, P)
+        blocks per grid step — the TPU analogue of the paper's one-block-
+        per-box shared-memory staging, widened to fill the 8x128 vector
+        registers / the MXU. Autotunable (solver.tune); correctness is
+        tile-independent.
+      stage_width: interaction-list slots staged per grid step. Each staged
+        slot adds one scalar-prefetch-indexed (1, n_pad) source tile per
+        target box, so a step DMAs tile_boxes*stage_width source rows and
+        amortizes grid overhead across them (double-buffered by Pallas).
     """
 
     n: int
@@ -59,6 +69,8 @@ class FmmConfig:
     m2l_chunk: int = 16
     translations: str = "mxu"
     use_p2l_m2p: bool = True
+    tile_boxes: int = 8
+    stage_width: int = 1
 
     # -- derived static properties ------------------------------------------
     @property
@@ -85,6 +97,12 @@ class FmmConfig:
             raise ValueError("p must be >= 1")
         if not (0.0 < self.theta < 1.0):
             raise ValueError("theta in (0,1)")
+        if self.tile_boxes < 1 or self.stage_width < 1:
+            raise ValueError("tile_boxes and stage_width must be >= 1")
+        if self.tile_boxes * self.stage_width > 128:
+            raise ValueError(
+                "tile_boxes * stage_width > 128: each staged source row is "
+                "one kernel operand; this tiling would not fit VMEM")
         if self.n < 4**self.nlevels:
             raise ValueError(
                 f"n={self.n} < 4**nlevels={4**self.nlevels}: every leaf needs "

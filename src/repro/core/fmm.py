@@ -306,17 +306,23 @@ def fmm_build(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> FmmPlan:
 
 
 def fmm_evaluate(plan: FmmPlan, cfg: FmmConfig,
-                 p2p_impl=None, m2l_impl=None, l2p_impl=None) -> jax.Array:
+                 p2p_impl=None, m2l_impl=None, l2p_impl=None,
+                 m2l_fused_impl=None) -> jax.Array:
     """Run upward/downward/evaluation on a built plan; returns sorted phi.
 
     ``p2p_impl`` / ``m2l_impl`` / ``l2p_impl`` optionally override the
     near-field, M2L and L2P sweeps (used to swap in Pallas kernels; see
     ``repro.solver.backends`` for the registry that bundles them).
+    ``m2l_fused_impl`` takes precedence over ``m2l_impl``: it receives the
+    per-level sequences and computes the whole downward M2L in one launch
+    (see ``downward_fused``).
     """
     tree, conn = plan.tree, plan.conn
     mult = upward(tree, cfg)
 
-    if m2l_impl is None:
+    if m2l_fused_impl is not None:
+        local = downward_fused(mult, tree, conn, cfg, m2l_fused_impl)
+    elif m2l_impl is None:
         local = downward(mult, tree, conn, cfg)
     else:
         local = downward_with(mult, tree, conn, cfg, m2l_impl)
@@ -345,6 +351,33 @@ def downward_with(mult, tree, conn, cfg, m2l_impl) -> jax.Array:
         local = l2l_level(local, tree, l, cfg, rho[l], rho[l - 1])
         local = local + m2l_impl(mult[l], conn.weak[l], tree.centers[l],
                                  cfg, rho[l])
+    if cfg.nlevels == 0:
+        local = local + m2l_impl(mult[0], conn.weak[0], tree.centers[0],
+                                 cfg, rho[0])
+    if cfg.use_p2l_m2p and cfg.nlevels > 0:
+        idx = jnp.asarray(leaf_particle_index(cfg))
+        local = p2l_sweep(local, tree, conn, cfg, idx, rho[cfg.nlevels])
+    return local
+
+
+def downward_fused(mult, tree, conn, cfg, m2l_fused_impl) -> jax.Array:
+    """Downward pass with the level-fused M2L hook (one launch, all levels).
+
+    ``m2l_fused_impl(mult, weak, centers, cfg, rho)`` receives the
+    per-level sequences and returns the per-level M2L contributions; the
+    (cheap, inherently sequential) L2L recursion then folds them in
+    level by level, replacing the per-level launch loop.
+    """
+    p = cfg.p
+    rho = effective_radii(tree, cfg)
+    contribs = m2l_fused_impl(mult, conn.weak, tree.centers, cfg, rho)
+    local = jnp.zeros((1, p + 1), dtype=mult[-1].dtype)
+    if cfg.nlevels == 0:
+        local = local + contribs[0]
+    else:
+        for l in range(1, cfg.nlevels + 1):
+            local = l2l_level(local, tree, l, cfg, rho[l], rho[l - 1])
+            local = local + contribs[l - 1]
     if cfg.use_p2l_m2p and cfg.nlevels > 0:
         idx = jnp.asarray(leaf_particle_index(cfg))
         local = p2l_sweep(local, tree, conn, cfg, idx, rho[cfg.nlevels])

@@ -19,14 +19,14 @@ backend name, or register new ones with ``register_backend``.
 """
 from . import common
 from .p2p import p2p_apply, p2p_pallas, p2p_ref
-from .m2l import m2l_level_apply, m2l_pallas, m2l_ref
+from .m2l import m2l_fused_apply, m2l_level_apply, m2l_pallas, m2l_ref
 from .l2p import l2p_apply, l2p_pallas, l2p_ref
 from .nbody import nbody_direct, nbody_pallas, nbody_ref
 
 __all__ = [
     "common",
     "p2p_apply", "p2p_pallas", "p2p_ref",
-    "m2l_level_apply", "m2l_pallas", "m2l_ref",
+    "m2l_fused_apply", "m2l_level_apply", "m2l_pallas", "m2l_ref",
     "l2p_apply", "l2p_pallas", "l2p_ref",
     "nbody_direct", "nbody_pallas", "nbody_ref",
 ]

@@ -13,12 +13,62 @@ from __future__ import annotations
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
 def default_interpret() -> bool:
     """Pallas interpret mode: True off-TPU (this container is CPU-only)."""
     return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Auto-select interpret mode from the JAX platform when unset.
+
+    Every kernel entry point takes ``interpret=None`` by default and
+    resolves it here: compiled on a real TPU, interpreted elsewhere — so
+    no caller has to thread the flag explicitly.
+    """
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def pad_rows(a: jax.Array, nrows: int, value=0):
+    """Pad a (rows, ...) array with ``value`` rows up to ``nrows``."""
+    extra = nrows - a.shape[0]
+    if extra == 0:
+        return a
+    widths = ((0, extra),) + ((0, 0),) * (a.ndim - 1)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def staged_list_specs(lists: jax.Array, dummy: int, TB: int, SW: int,
+                      width: int):
+    """Tiled scalar-prefetch staging shared by the P2P and M2L kernels.
+
+    Pads the (nbox, S) interaction list for a ``(ntile, S_pad // SW)``
+    grid of ``TB``-target-box tiles — masked (-1) and padding entries
+    redirected to the all-zero ``dummy`` row — and builds one
+    ``(1, width)`` scalar-prefetch-indexed BlockSpec per staged source
+    row: spec (w, tb) DMAs the row named by list entry
+    ``[i*TB + tb, s*SW + w]`` at grid step (i, s).
+
+    Returns ``(padded_lists, src_specs, ntile)``.
+    """
+    nbox, S = lists.shape
+    ntile = -(-nbox // TB)
+    S_pad = round_up(S, SW)
+    lists = jnp.where(lists >= 0, lists, dummy)
+    lists = pad_rows(lists, ntile * TB, dummy)
+    lists = jnp.pad(lists, ((0, 0), (0, S_pad - S)), constant_values=dummy)
+
+    def make_src_map(w, tb):
+        def src_map(i, s, lref):
+            return (lref[i * TB + tb, s * SW + w], 0)
+        return src_map
+
+    specs = [pl.BlockSpec((1, width), make_src_map(w, tb))
+             for w in range(SW) for tb in range(TB)]
+    return lists, specs, ntile
 
 
 def compiler_params(**kwargs):

@@ -1,11 +1,12 @@
 """Pallas TPU kernel: local evaluation (L2P) at leaf particles.
 
-One grid step per leaf box: the (1, P) local-coefficient block and the
-(1, n_pad) pre-centered particle tile live in VMEM; the p-term Horner
-recurrence runs on full vector registers with the coefficients read as
-scalars (static lane indices). The paper uses one thread per evaluation
-point with 64 threads/block; the TPU analogue is the 8x128 vector lane
-grid processing the whole box at once.
+One grid step per *tile* of ``tile_boxes`` leaf boxes: the (TB, P)
+local-coefficient block and the (TB, n_pad) pre-centered particle tile
+live in VMEM; the p-term Horner recurrence runs on full multi-sublane
+vector registers with the coefficients read as per-row columns (static
+lane indices). The paper uses one thread per evaluation point with 64
+threads/block; the TPU analogue is the 8x128 vector lane grid processing
+``tile_boxes`` whole boxes at once (DESIGN.md §2).
 """
 from __future__ import annotations
 
@@ -15,18 +16,18 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..common import compiler_params
+from ..common import compiler_params, pad_rows, resolve_interpret
 
 
 def _make_kernel(p: int):
     def kernel(br_ref, bi_ref, tr_ref, ti_ref, outr, outi):
-        tr = tr_ref[...]
+        tr = tr_ref[...]                    # (TB, n_pad)
         ti = ti_ref[...]
-        accr = jnp.full_like(tr, 0.0) + br_ref[0, p]
-        acci = jnp.full_like(ti, 0.0) + bi_ref[0, p]
+        accr = jnp.zeros_like(tr) + br_ref[:, p:p + 1]
+        acci = jnp.zeros_like(ti) + bi_ref[:, p:p + 1]
         for j in range(p - 1, -1, -1):
-            nr = accr * tr - acci * ti + br_ref[0, j]
-            ni = accr * ti + acci * tr + bi_ref[0, j]
+            nr = accr * tr - acci * ti + br_ref[:, j:j + 1]
+            ni = accr * ti + acci * tr + bi_ref[:, j:j + 1]
             accr, acci = nr, ni
         outr[...] = accr
         outi[...] = acci
@@ -34,33 +35,45 @@ def _make_kernel(p: int):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("p", "interpret"))
-def l2p_pallas(br, bi, tr, ti, *, p: int, interpret: bool = True):
-    """br/bi: (nbox, P) local planes; tr/ti: (nbox, n_pad) pre-centered
-    particle planes (z - z0). Returns (outr, outi): (nbox, n_pad)."""
+@functools.partial(jax.jit, static_argnames=("p", "tile_boxes", "interpret"))
+def _l2p_pallas(br, bi, tr, ti, *, p: int, tile_boxes: int, interpret: bool):
     nbox, P = br.shape
     n_pad = tr.shape[1]
+    TB = tile_boxes
+    ntile = -(-nbox // TB)
+    br, bi = pad_rows(br, ntile * TB), pad_rows(bi, ntile * TB)
+    tr, ti = pad_rows(tr, ntile * TB), pad_rows(ti, ntile * TB)
 
     def row(b):
         return (b, 0)
 
     dt = tr.dtype
-    return pl.pallas_call(
+    outr, outi = pl.pallas_call(
         _make_kernel(p),
-        grid=(nbox,),
+        grid=(ntile,),
         in_specs=[
-            pl.BlockSpec((1, P), row),
-            pl.BlockSpec((1, P), row),
-            pl.BlockSpec((1, n_pad), row),
-            pl.BlockSpec((1, n_pad), row),
+            pl.BlockSpec((TB, P), row),
+            pl.BlockSpec((TB, P), row),
+            pl.BlockSpec((TB, n_pad), row),
+            pl.BlockSpec((TB, n_pad), row),
         ],
         out_specs=[
-            pl.BlockSpec((1, n_pad), row),
-            pl.BlockSpec((1, n_pad), row),
+            pl.BlockSpec((TB, n_pad), row),
+            pl.BlockSpec((TB, n_pad), row),
         ],
-        out_shape=[jax.ShapeDtypeStruct((nbox, n_pad), dt)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((ntile * TB, n_pad), dt)] * 2,
         compiler_params=compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
     )(br, bi, tr, ti)
+    return outr[:nbox], outi[:nbox]
+
+
+def l2p_pallas(br, bi, tr, ti, *, p: int, tile_boxes: int = 8,
+               interpret: bool | None = None):
+    """br/bi: (nbox, P) local planes; tr/ti: (nbox, n_pad) pre-centered
+    particle planes (z - z0). Returns (outr, outi): (nbox, n_pad).
+    ``interpret=None`` auto-selects from the JAX platform."""
+    return _l2p_pallas(br, bi, tr, ti, p=p, tile_boxes=tile_boxes,
+                       interpret=resolve_interpret(interpret))

@@ -5,16 +5,13 @@ import numpy as np
 import jax.numpy as jnp
 
 from ...core.config import FmmConfig
-from ..common import (default_interpret, dense_leaf_arrays, round_up,
-                      scatter_from_leaves)
+from ..common import dense_leaf_arrays, round_up, scatter_from_leaves
 from .l2p import l2p_pallas
 
 
 def l2p_apply(local, tree, cfg: FmmConfig, idx: np.ndarray,
               interpret: bool | None = None):
     """Evaluate leaf local expansions; returns (n,) complex in rank order."""
-    if interpret is None:
-        interpret = default_interpret()
     idx = np.asarray(idx)
     n_pad = round_up(idx.shape[1], 128)
     rdt = cfg.real_dtype
@@ -31,6 +28,7 @@ def l2p_apply(local, tree, cfg: FmmConfig, idx: np.ndarray,
     br = jnp.pad(jnp.real(local), ((0, 0), (0, pad))).astype(rdt)
     bi = jnp.pad(jnp.imag(local), ((0, 0), (0, pad))).astype(rdt)
 
-    outr, outi = l2p_pallas(br, bi, tr, ti, p=cfg.p, interpret=interpret)
+    outr, outi = l2p_pallas(br, bi, tr, ti, p=cfg.p,
+                            tile_boxes=cfg.tile_boxes, interpret=interpret)
     out = jnp.where(valid, outr + 1j * outi, 0.0)
     return scatter_from_leaves(out, idx, cfg.n)

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: M2L level sweep (the paper's Algorithm 3.6).
+"""Pallas TPU kernel: M2L translation sweep (the paper's Algorithm 3.6).
 
 The CUDA implementation runs the scaled-Horner shift with two threads per
 shift in shared memory, one block owning all shifts of a target box (no f64
@@ -7,15 +7,24 @@ atomics on Fermi). On TPU we use the factorized form (DESIGN.md §2):
     local += diag((-1/r)^l) · H · diag(r^-k) · mult[src],
     H[l,k] = C(l+k-1, k-1)   (constant Hankel-binomial matrix)
 
-so the inner operation per (target, weak-list slot) is a (1,P)x(P,P) GEMM
-on the MXU plus two O(p) diagonal scalings computed as in-register scalar
+so the inner operation per weak-list slot is a (TB,P)x(P,P) GEMM on the
+MXU — a grid step owns a *tile* of ``tile_boxes`` target boxes, so the
+contraction runs on full multi-sublane register tiles instead of rank-1
+rows — plus two O(p) diagonal scalings computed as in-register column
 recurrences (the paper's pre/post-scaling phases, verbatim). Source
-coefficient rows are DMA'd HBM->VMEM through a scalar-prefetch indexed
-BlockSpec driven by the weak interaction list; accumulation happens in the
-revisited output block across the s grid axis — deterministic, in contrast
-to the atomics the paper had to design around.
+coefficient rows are DMA'd HBM->VMEM through scalar-prefetch indexed
+BlockSpecs driven by the weak interaction list (``stage_width`` slots per
+step, double-buffered by Pallas); accumulation happens in the revisited
+(TB, P) output block across the list axis — deterministic, in contrast to
+the atomics the paper had to design around.
 
-Harmonic kernel only (a_0 = 0), as in all of the paper's experiments.
+The box axis is *level-agnostic*: callers may flatten all levels of the
+downward pass into one (sum 4^l, W) call with statically offset lists
+(see ops.m2l_fused_apply), collapsing L launches into one.
+
+Both G-kernels: "harmonic" (a_0 = 0, as in all of the paper's
+experiments) and "log" (a_0 carries the source strength; the extra
+a_0·log r term rides in as precomputed log-plane columns).
 """
 from __future__ import annotations
 
@@ -26,12 +35,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..common import compiler_params
+from ..common import (compiler_params, pad_rows, resolve_interpret,
+                      round_up, staged_list_specs)
 
 
-def _make_kernel(p: int, P: int):
-    def kernel(weak_ref, ar_ref, ai_ref, prer_ref, prei_ref, postr_ref,
-               posti_ref, ht_ref, outr, outi):
+def _make_kernel(p: int, P: int, kernel: str, TB: int, SW: int):
+    n = TB * SW
+
+    def body(weak_ref, *rest):
+        ar_refs, ai_refs = rest[:n], rest[n:2 * n]
+        prer_ref, prei_ref, postr_ref, posti_ref = rest[2 * n:2 * n + 4]
+        if kernel == "log":
+            logr_ref, logi_ref, ht_ref = rest[2 * n + 4:2 * n + 7]
+            outr, outi = rest[2 * n + 7], rest[2 * n + 8]
+        else:
+            ht_ref = rest[2 * n + 4]
+            outr, outi = rest[2 * n + 5], rest[2 * n + 6]
         s = pl.program_id(1)
 
         @pl.when(s == 0)
@@ -39,83 +58,118 @@ def _make_kernel(p: int, P: int):
             outr[...] = jnp.zeros_like(outr)
             outi[...] = jnp.zeros_like(outi)
 
-        def scalar_pows(br, bi):
-            # [(br+i bi)^k for k=0..p], padded with zeros to length P
-            out_r, out_i = [jnp.ones_like(br)], [jnp.zeros_like(bi)]
+        def col_pows(br, bi):
+            # [(br+i bi)^k for k=0..p] as (TB, P) planes, zero-padded
+            rs, is_ = [jnp.ones_like(br)], [jnp.zeros_like(bi)]
             for _ in range(p):
-                nr = out_r[-1] * br - out_i[-1] * bi
-                ni = out_r[-1] * bi + out_i[-1] * br
-                out_r.append(nr)
-                out_i.append(ni)
+                nr = rs[-1] * br - is_[-1] * bi
+                ni = rs[-1] * bi + is_[-1] * br
+                rs.append(nr)
+                is_.append(ni)
             zpad = [jnp.zeros_like(br)] * (P - p - 1)
-            return (jnp.stack(out_r + zpad)[None, :],
-                    jnp.stack(out_i + zpad)[None, :])
+            return (jnp.concatenate(rs + zpad, axis=1),
+                    jnp.concatenate(is_ + zpad, axis=1))
 
-        # bounded ratio scale factors (radius-normalized coefficients):
-        pr, pi = scalar_pows(prer_ref[0, s], prei_ref[0, s])   # (rho_s/r)^k
-        mr, mi = scalar_pows(postr_ref[0, s], posti_ref[0, s])  # (-rho_t/r)^l
+        ht = ht_ref[...]
+        for w in range(SW):
+            o = w * TB
+            ar = jnp.concatenate([r[...] for r in ar_refs[o:o + TB]], axis=0)
+            ai = jnp.concatenate([r[...] for r in ai_refs[o:o + TB]], axis=0)
+            # bounded ratio scale factors (radius-normalized coefficients):
+            pr, pi = col_pows(prer_ref[:, w:w + 1], prei_ref[:, w:w + 1])
+            mr, mi = col_pows(postr_ref[:, w:w + 1], posti_ref[:, w:w + 1])
+            ahr = ar * pr - ai * pi
+            ahi = ar * pi + ai * pr
+            dt = ar.dtype
+            bhr = jnp.dot(ahr, ht, preferred_element_type=dt)
+            bhi = jnp.dot(ahi, ht, preferred_element_type=dt)
+            outr[...] += bhr * mr - bhi * mi
+            outi[...] += bhr * mi + bhi * mr
+            if kernel == "log":
+                # b_0 += a_0 * log(r) (source strength rides in a_0)
+                a0r, a0i = ar[:, 0:1], ai[:, 0:1]
+                lr = logr_ref[:, w:w + 1]
+                li = logi_ref[:, w:w + 1]
+                col0 = jax.lax.broadcasted_iota(jnp.int32, (TB, P), 1) == 0
+                outr[...] += jnp.where(col0, a0r * lr - a0i * li, 0.0)
+                outi[...] += jnp.where(col0, a0r * li + a0i * lr, 0.0)
 
-        ar = ar_ref[...]
-        ai = ai_ref[...]
-        ahr = ar * pr - ai * pi
-        ahi = ar * pi + ai * pr
-        dt = ar.dtype
-        bhr = jnp.dot(ahr, ht_ref[...], preferred_element_type=dt)
-        bhi = jnp.dot(ahi, ht_ref[...], preferred_element_type=dt)
-        outr[...] += bhr * mr - bhi * mi
-        outi[...] += bhr * mi + bhi * mr
-
-    return kernel
+    return body
 
 
-@functools.partial(jax.jit, static_argnames=("p", "interpret"))
-def m2l_pallas(weak: jax.Array, ar, ai, prer, prei, postr, posti, ht, *,
-               p: int, interpret: bool = True):
-    """weak: (nbox, W) int32 (-1 masked -> redirected to zero dummy row).
-
-    ar/ai: (nbox+1, P) normalized multipole planes; prer/prei and
-    postr/posti: (nbox, W) complex ratio planes (rho_s/r and -rho_t/r);
-    ht: (P, P) transposed Hankel matrix. Returns (outr, outi) of shape
-    (nbox, P) — the summed normalized local contributions of the level.
-    """
+@functools.partial(jax.jit, static_argnames=("p", "kernel", "tile_boxes",
+                                             "stage_width", "interpret"))
+def _m2l_pallas(weak: jax.Array, ar, ai, prer, prei, postr, posti, logr,
+                logi, ht, *, p: int, kernel: str, tile_boxes: int,
+                stage_width: int, interpret: bool):
     nbox, W = weak.shape
     P = ar.shape[1]
+    TB, SW = tile_boxes, stage_width
+    W_pad = round_up(W, SW)
     dummy = ar.shape[0] - 1
-    weak = jnp.where(weak >= 0, weak, dummy)
 
-    def tgt_map(b, s, wref):
-        return (b, 0)
+    weak, src_specs, ntile = staged_list_specs(weak, dummy, TB, SW, P)
 
-    def src_map(b, s, wref):
-        return (wref[b, s], 0)
+    def plane(a):
+        a = pad_rows(a, ntile * TB)
+        return jnp.pad(a, ((0, 0), (0, W_pad - W)))
 
-    def const_map(b, s, wref):
+    planes = [plane(a) for a in (prer, prei, postr, posti)]
+    if kernel == "log":
+        planes += [plane(logr), plane(logi)]
+
+    def tgt_map(i, s, wref):
+        return (i, 0)
+
+    def slot_map(i, s, wref):
+        return (i, s)
+
+    def const_map(i, s, wref):
         return (0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(nbox, W),
-        in_specs=[
-            pl.BlockSpec((1, P), src_map),    # ar
-            pl.BlockSpec((1, P), src_map),    # ai
-            pl.BlockSpec((1, W), tgt_map),    # pre (re)
-            pl.BlockSpec((1, W), tgt_map),    # pre (im)
-            pl.BlockSpec((1, W), tgt_map),    # post (re)
-            pl.BlockSpec((1, W), tgt_map),    # post (im)
-            pl.BlockSpec((P, P), const_map),  # ht
-        ],
+        grid=(ntile, W_pad // SW),
+        in_specs=(src_specs * 2
+                  + [pl.BlockSpec((TB, SW), slot_map)] * len(planes)
+                  + [pl.BlockSpec((P, P), const_map)]),
         out_specs=[
-            pl.BlockSpec((1, P), tgt_map),
-            pl.BlockSpec((1, P), tgt_map),
+            pl.BlockSpec((TB, P), tgt_map),
+            pl.BlockSpec((TB, P), tgt_map),
         ],
     )
     dt = ar.dtype
-    return pl.pallas_call(
-        _make_kernel(p, P),
+    n = TB * SW
+    outr, outi = pl.pallas_call(
+        _make_kernel(p, P, kernel, TB, SW),
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((nbox, P), dt)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((ntile * TB, P), dt)] * 2,
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(weak, ar, ai, prer, prei, postr, posti, ht)
+    )(weak, *([ar] * n), *([ai] * n), *planes, ht)
+    return outr[:nbox], outi[:nbox]
+
+
+def m2l_pallas(weak: jax.Array, ar, ai, prer, prei, postr, posti, ht, *,
+               p: int, kernel: str = "harmonic", logr=None, logi=None,
+               tile_boxes: int = 8, stage_width: int = 1,
+               interpret: bool | None = None):
+    """weak: (nbox, W) int32 (-1 masked -> redirected to zero dummy row).
+
+    ar/ai: (nbox+1, P) normalized multipole planes; prer/prei and
+    postr/posti: (nbox, W) complex ratio planes (rho_s/r and -rho_t/r);
+    ht: (P, P) transposed Hankel matrix; logr/logi: (nbox, W) log(r)
+    planes (log kernel only). Returns (outr, outi) of shape (nbox, P) —
+    the summed normalized local contributions per target box.
+    ``interpret=None`` auto-selects from the JAX platform.
+    """
+    if kernel == "log" and (logr is None or logi is None):
+        raise ValueError("log kernel needs logr/logi planes")
+    if logr is None:
+        logr = logi = jnp.zeros((), ar.dtype)  # unused placeholder
+    return _m2l_pallas(weak, ar, ai, prer, prei, postr, posti, logr, logi,
+                       ht, p=p, kernel=kernel, tile_boxes=tile_boxes,
+                       stage_width=stage_width,
+                       interpret=resolve_interpret(interpret))

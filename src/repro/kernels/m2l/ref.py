@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def m2l_ref(weak, ar, ai, prer, prei, postr, posti, ht):
+def m2l_ref(weak, ar, ai, prer, prei, postr, posti, ht,
+            logr=None, logi=None):
     nbox, W = weak.shape
     P = ar.shape[1]
     dummy = ar.shape[0] - 1
@@ -15,4 +16,7 @@ def m2l_ref(weak, ar, ai, prer, prei, postr, posti, ht):
     post = (postr + 1j * posti)[..., None] ** k  # (-rho_t/r)^l
     b_hat = jnp.einsum("bwk,kl->bwl", a * pre, ht.astype(a.dtype))
     out = (b_hat * post).sum(axis=1)
+    if logr is not None:
+        # log kernel: b_0 += sum_w a_0 * log(r)
+        out = out.at[:, 0].add((a[..., 0] * (logr + 1j * logi)).sum(axis=1))
     return jnp.real(out), jnp.imag(out)

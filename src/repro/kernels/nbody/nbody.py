@@ -14,7 +14,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from ..common import compiler_params
+from ..common import compiler_params, resolve_interpret
 
 
 def _nbody_kernel(tzr, tzi, szr, szi, sqr, sqi, outr, outi):
@@ -37,9 +37,8 @@ def _nbody_kernel(tzr, tzi, szr, szi, sqr, sqi, outr, outi):
 
 
 @functools.partial(jax.jit, static_argnames=("t_tile", "s_tile", "interpret"))
-def nbody_pallas(tzr, tzi, szr, szi, sqr, sqi, *, t_tile: int = 256,
-                 s_tile: int = 512, interpret: bool = True):
-    """All planes are 1-D (padded); returns (outr, outi) at target points."""
+def _nbody_pallas(tzr, tzi, szr, szi, sqr, sqi, *, t_tile: int,
+                  s_tile: int, interpret: bool):
     nt = tzr.shape[0] // t_tile
     ns = szr.shape[0] // s_tile
 
@@ -74,3 +73,11 @@ def nbody_pallas(tzr, tzi, szr, szi, sqr, sqi, *, t_tile: int = 256,
     )(r2(tzr, t_tile), r2(tzi, t_tile), r2(szr, s_tile), r2(szi, s_tile),
       r2(sqr, s_tile), r2(sqi, s_tile))
     return outr.reshape(-1), outi.reshape(-1)
+
+
+def nbody_pallas(tzr, tzi, szr, szi, sqr, sqi, *, t_tile: int = 256,
+                 s_tile: int = 512, interpret: bool | None = None):
+    """All planes are 1-D (padded); returns (outr, outi) at target points.
+    ``interpret=None`` auto-selects from the JAX platform."""
+    return _nbody_pallas(tzr, tzi, szr, szi, sqr, sqi, t_tile=t_tile,
+                         s_tile=s_tile, interpret=resolve_interpret(interpret))

@@ -4,8 +4,7 @@ from __future__ import annotations
 import numpy as np
 
 from ...core.config import FmmConfig
-from ..common import (default_interpret, dense_leaf_arrays, round_up,
-                      scatter_from_leaves)
+from ..common import dense_leaf_arrays, round_up, scatter_from_leaves
 from .p2p import p2p_pallas
 
 
@@ -15,13 +14,10 @@ def p2p_apply(tree, conn, cfg: FmmConfig, idx: np.ndarray,
 
     Returns (n,) complex potential contribution in rank order.
     """
-    if cfg.kernel != "harmonic":
-        raise NotImplementedError("Pallas P2P implements the harmonic kernel")
-    if interpret is None:
-        interpret = default_interpret()
     idx = np.asarray(idx)
     n_pad = round_up(idx.shape[1], 128)
     zr, zi, qr, qi, _ = dense_leaf_arrays(tree.z, tree.q, idx, n_pad)
     outr, outi = p2p_pallas(conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi,
-                            interpret=interpret)
+                            kernel=cfg.kernel, tile_boxes=cfg.tile_boxes,
+                            stage_width=cfg.stage_width, interpret=interpret)
     return scatter_from_leaves(outr + 1j * outi, idx, cfg.n)

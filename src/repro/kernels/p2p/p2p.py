@@ -3,15 +3,21 @@
 This is the paper's Algorithm 3.7 (43% of GPU runtime, Table 5.1) mapped to
 the TPU memory hierarchy. The CUDA version stages source positions for one
 interaction box at a time into 48 kB shared memory with one block per target
-box; here each grid step (b, s) stages one (1, n_pad) source-box tile from
-HBM into VMEM via a *scalar-prefetch indexed BlockSpec* — the interaction
-list itself rides in SMEM and selects which block of the dense leaf array to
-DMA, so the hot loop contains no gather at all (the static leaf layout of
-the asymmetric tree is what makes this possible). The (n_pad, n_pad)
-pairwise tile lives entirely in VREGs/VMEM.
+box; here a grid step owns a *tile* of ``tile_boxes`` target boxes
+(DESIGN.md §2): the (TB, n_pad) target planes and the revisited (TB, n_pad)
+output block stay resident in VMEM across the whole interaction list, and
+each step stages ``tile_boxes * stage_width`` source-box rows from HBM via
+*scalar-prefetch indexed BlockSpecs* — the interaction list itself rides in
+SMEM and selects which block of the dense leaf array to DMA, so the hot
+loop contains no gather at all (the static leaf layout of the asymmetric
+tree is what makes this possible). Pallas double-buffers the streaming
+source tiles, overlapping the next DMA with the (TB, n_pad, n_pad)
+pairwise tile evaluated in VREGs.
 
-Grid: (nbox, strong_cap); output revisited across s -> accumulate in place
-(dimension_semantics: "arbitrary" on s).
+Grid: (ceil(nbox/TB), ceil(S/SW)); output revisited across the list axis
+-> accumulate in place (dimension_semantics: "arbitrary" on it).
+
+Both G-kernels: "harmonic" q/(x - z) and "log" q*log(z - x).
 """
 from __future__ import annotations
 
@@ -22,71 +28,106 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..common import compiler_params
+from ..common import (compiler_params, pad_rows, resolve_interpret,
+                      staged_list_specs)
 
 
-def _p2p_kernel(lists_ref, tzr, tzi, szr, szi, sqr, sqi, outr, outi):
-    s = pl.program_id(1)
+def _make_kernel(kernel: str, TB: int, SW: int):
+    def body(lists_ref, tzr_ref, tzi_ref, *rest):
+        n = TB * SW
+        szr_refs, szi_refs = rest[:n], rest[n:2 * n]
+        sqr_refs, sqi_refs = rest[2 * n:3 * n], rest[3 * n:4 * n]
+        outr, outi = rest[4 * n], rest[4 * n + 1]
+        s = pl.program_id(1)
 
-    @pl.when(s == 0)
-    def _init():
-        outr[...] = jnp.zeros_like(outr)
-        outi[...] = jnp.zeros_like(outi)
+        @pl.when(s == 0)
+        def _init():
+            outr[...] = jnp.zeros_like(outr)
+            outi[...] = jnp.zeros_like(outi)
 
-    # (n_t, n_s) pairwise tile: diff = z_src - z_tgt
-    dx = szr[0][None, :] - tzr[0][:, None]
-    dy = szi[0][None, :] - tzi[0][:, None]
-    denom = dx * dx + dy * dy
-    ok = denom > 0.0                       # excludes coincident + zero pads
-    inv = jnp.where(ok, 1.0 / jnp.where(ok, denom, 1.0), 0.0)
-    qr = sqr[0][None, :]
-    qi = sqi[0][None, :]
-    # q / (dx + i dy) = q * (dx - i dy) / |d|^2
-    outr[...] += ((qr * dx + qi * dy) * inv).sum(axis=1)[None, :]
-    outi[...] += ((qi * dx - qr * dy) * inv).sum(axis=1)[None, :]
+        tzr = tzr_ref[...]                     # (TB, n_pad) resident targets
+        tzi = tzi_ref[...]
+        for w in range(SW):
+            o = w * TB
+
+            def tile(refs):
+                return jnp.concatenate([r[...] for r in refs[o:o + TB]],
+                                       axis=0)
+
+            szr, szi = tile(szr_refs), tile(szi_refs)   # (TB, n_pad) sources
+            # (TB, n_t, n_s) pairwise tile: diff = z_src - z_tgt
+            dx = szr[:, None, :] - tzr[:, :, None]
+            dy = szi[:, None, :] - tzi[:, :, None]
+            qr = tile(sqr_refs)[:, None, :]
+            qi = tile(sqi_refs)[:, None, :]
+            d2 = dx * dx + dy * dy
+            ok = d2 > 0.0                      # excludes coincident + pads
+            if kernel == "harmonic":
+                # q / (dx + i dy) = q * (dx - i dy) / |d|^2
+                inv = jnp.where(ok, 1.0 / jnp.where(ok, d2, 1.0), 0.0)
+                outr[...] += ((qr * dx + qi * dy) * inv).sum(axis=-1)
+                outi[...] += ((qi * dx - qr * dy) * inv).sum(axis=-1)
+            else:
+                # q * log(z_t - z_s) = q * (log|d| + i*arg(-dx, -dy))
+                lr = jnp.where(ok, 0.5 * jnp.log(jnp.where(ok, d2, 1.0)),
+                               0.0)
+                li = jnp.where(ok, jnp.arctan2(-dy, -dx), 0.0)
+                outr[...] += (qr * lr - qi * li).sum(axis=-1)
+                outi[...] += (qr * li + qi * lr).sum(axis=-1)
+
+    return body
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def p2p_pallas(lists: jax.Array, tzr, tzi, szr, szi, sqr, sqi,
-               *, interpret: bool = True):
-    """lists: (nbox, S) int32 (-1 masked). Dense planes: (nbox[+1], n_pad).
-
-    Returns (outr, outi): (nbox, n_pad) potential at the dense leaf slots.
-    """
-    nbox, S = lists.shape
+@functools.partial(jax.jit, static_argnames=("kernel", "tile_boxes",
+                                             "stage_width", "interpret"))
+def _p2p_pallas(lists: jax.Array, tzr, tzi, szr, szi, sqr, sqi, *,
+                kernel: str, tile_boxes: int, stage_width: int,
+                interpret: bool):
+    nbox = lists.shape[0]
     n_pad = tzr.shape[1]
+    TB, SW = tile_boxes, stage_width
     dummy = szr.shape[0] - 1  # index of the all-zero row
-    lists = jnp.where(lists >= 0, lists, dummy)
 
-    def tgt_map(b, s, lref):
-        return (b, 0)
+    lists, src_specs, ntile = staged_list_specs(lists, dummy, TB, SW, n_pad)
+    tzr = pad_rows(tzr, ntile * TB)
+    tzi = pad_rows(tzi, ntile * TB)
 
-    def src_map(b, s, lref):
-        return (lref[b, s], 0)
+    def tgt_map(i, s, lref):
+        return (i, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(nbox, S),
-        in_specs=[
-            pl.BlockSpec((1, n_pad), tgt_map),
-            pl.BlockSpec((1, n_pad), tgt_map),
-            pl.BlockSpec((1, n_pad), src_map),
-            pl.BlockSpec((1, n_pad), src_map),
-            pl.BlockSpec((1, n_pad), src_map),
-            pl.BlockSpec((1, n_pad), src_map),
-        ],
+        grid=(ntile, lists.shape[1] // SW),
+        in_specs=[pl.BlockSpec((TB, n_pad), tgt_map),
+                  pl.BlockSpec((TB, n_pad), tgt_map)] + src_specs * 4,
         out_specs=[
-            pl.BlockSpec((1, n_pad), tgt_map),
-            pl.BlockSpec((1, n_pad), tgt_map),
+            pl.BlockSpec((TB, n_pad), tgt_map),
+            pl.BlockSpec((TB, n_pad), tgt_map),
         ],
     )
     dt = tzr.dtype
-    return pl.pallas_call(
-        _p2p_kernel,
+    n = TB * SW
+    outr, outi = pl.pallas_call(
+        _make_kernel(kernel, TB, SW),
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((nbox, n_pad), dt)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((ntile * TB, n_pad), dt)] * 2,
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(lists, tzr, tzi, szr, szi, sqr, sqi)
+    )(lists, tzr, tzi, *([szr] * n), *([szi] * n), *([sqr] * n),
+      *([sqi] * n))
+    return outr[:nbox], outi[:nbox]
+
+
+def p2p_pallas(lists: jax.Array, tzr, tzi, szr, szi, sqr, sqi, *,
+               kernel: str = "harmonic", tile_boxes: int = 8,
+               stage_width: int = 1, interpret: bool | None = None):
+    """lists: (nbox, S) int32 (-1 masked). Dense planes: (nbox[+1], n_pad).
+
+    Returns (outr, outi): (nbox, n_pad) potential at the dense leaf slots.
+    ``interpret=None`` auto-selects from the JAX platform (compiled on TPU).
+    """
+    return _p2p_pallas(lists, tzr, tzi, szr, szi, sqr, sqi, kernel=kernel,
+                       tile_boxes=tile_boxes, stage_width=stage_width,
+                       interpret=resolve_interpret(interpret))

@@ -1,10 +1,10 @@
-"""Pure-jnp oracle for the P2P kernel (harmonic kernel, dense leaf layout)."""
+"""Pure-jnp oracle for the P2P kernel (both G-kernels, dense leaf layout)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def p2p_ref(lists, tzr, tzi, szr, szi, sqr, sqi):
+def p2p_ref(lists, tzr, tzi, szr, szi, sqr, sqi, kernel: str = "harmonic"):
     """Same contract as p2p_pallas; returns (outr, outi) of (nbox, n_pad)."""
     nbox, S = lists.shape
     dummy = szr.shape[0] - 1
@@ -14,6 +14,10 @@ def p2p_ref(lists, tzr, tzi, szr, szi, sqr, sqi):
     sq = (sqr + 1j * sqi)[lists]
     diff = sz[:, None, :, :] - tz[:, :, None, None]   # (nbox, n_t, S, n_s)
     ok = diff != 0
-    c = jnp.where(ok, sq[:, None, :, :] / jnp.where(ok, diff, 1.0), 0.0)
+    if kernel == "harmonic":
+        c = jnp.where(ok, sq[:, None, :, :] / jnp.where(ok, diff, 1.0), 0.0)
+    else:
+        c = jnp.where(ok, sq[:, None, :, :]
+                      * jnp.log(jnp.where(ok, -diff, 1.0)), 0.0)
     phi = c.sum(axis=(2, 3))
     return jnp.real(phi), jnp.imag(phi)

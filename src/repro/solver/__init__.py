@@ -6,7 +6,7 @@ dispatch, batched multi-problem evaluation, and cap autotuning.
     phi = solver.apply(z, q)
     phib = solver.apply_batched(zb, qb)
 """
-from .autotune import TuneResult, probe_caps, tune_caps
+from .autotune import TuneResult, probe_caps, tune_caps, tune_tiles
 from .backends import (Backend, available_backends, get_backend,
                        register_backend)
 from .solver import FmmSolver
@@ -14,5 +14,5 @@ from .solver import FmmSolver
 __all__ = [
     "FmmSolver",
     "Backend", "available_backends", "get_backend", "register_backend",
-    "TuneResult", "probe_caps", "tune_caps",
+    "TuneResult", "probe_caps", "tune_caps", "tune_tiles",
 ]

@@ -1,4 +1,4 @@
-"""Cap autotuning: fit the padded-list budgets to the workload.
+"""Workload autotuning: fit the padded-list budgets and kernel tiles.
 
 The connectivity lists are padded to static caps (``strong_cap`` /
 ``weak_cap``) so every shape is compile-time constant — the paper's
@@ -19,13 +19,19 @@ one evaluation) a handful of times on a sample of the workload:
   3. *verify*: one final build confirms ``overflow == 0`` at the shrunk
      caps.
 
+``tune_tiles`` picks the Pallas kernel tiling (``tile_boxes`` /
+``stage_width``, DESIGN.md §2) for the tuned caps: a timing sweep of the
+real end-to-end apply path when the backend compiles (on TPU), a
+lane-geometry heuristic otherwise (interpret-mode timings are noise).
+
 A 2-D sample ``(B, N)`` tunes a shared cap budget across all B problems
 (the ``apply_batched`` serving shape): caps are sized to the worst row.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+import time
+from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,14 +39,17 @@ import jax.numpy as jnp
 from ..core.config import FmmConfig
 from ..core.connectivity import connectivity_stats
 from ..core.fmm import fmm_build
+from ..kernels.common import default_interpret
+from .backends import get_backend
 
 
 class TuneResult(NamedTuple):
-    """Outcome of a cap-tuning run."""
+    """Outcome of a tuning run (caps, and optionally tiles)."""
 
     cfg: FmmConfig          # tuned config (overflow-free on the sample)
     stats: dict             # connectivity stats at the tuned caps
     trials: list            # [(strong_cap, weak_cap, overflow), ...]
+    tile_trials: tuple = ()  # ((tile_boxes, stage_width, seconds|None), ...)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -104,3 +113,92 @@ def tune_caps(z: jax.Array, q: jax.Array | None, cfg: FmmConfig, *,
     if overflow != 0:  # cannot happen: caps >= measured maxima
         raise RuntimeError("tuned caps overflow; file a bug")
     return TuneResult(cfg=tuned, stats=stats, trials=trials)
+
+
+# ---------------------------------------------------------------------------
+# kernel-tile tuning (tile_boxes / stage_width, DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+def tile_candidates(cfg: FmmConfig) -> list[int]:
+    """Pow-2 ``tile_boxes`` candidates up to the leaf-level box count."""
+    return [t for t in (1, 2, 4, 8, 16) if t <= cfg.nboxes] or [1]
+
+
+def heuristic_tiles(cfg: FmmConfig) -> FmmConfig:
+    """Lane-geometry default when timing is unavailable: the largest
+    pow-2 tile <= min(8 sublanes, nboxes) fills the f32 vector registers;
+    one staged slot keeps the VMEM working set minimal."""
+    tb = max(t for t in tile_candidates(cfg) if t <= 8)
+    return dataclasses.replace(cfg, tile_boxes=tb, stage_width=1)
+
+
+def _apply_timer(backend: str, repeats: int) -> Callable:
+    """Time the jitted end-to-end apply path for one config (seconds)."""
+    from ..core.fmm import fmm_evaluate  # local: avoid cycle at import
+
+    def timer(z, q, cfg: FmmConfig) -> float:
+        impls = get_backend(backend, cfg).phase_impls(cfg)
+
+        @jax.jit
+        def run(z, q):
+            return fmm_evaluate(fmm_build(z, q, cfg), cfg, **impls)
+
+        jax.block_until_ready(run(z, q))           # compile
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(z, q))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    return timer
+
+
+def tune_tiles(z: jax.Array, q: jax.Array | None, cfg: FmmConfig, *,
+               backend: str = "auto", repeats: int = 3,
+               timer: Optional[Callable] = None
+               ) -> tuple[FmmConfig, list]:
+    """Pick ``tile_boxes``/``stage_width`` for this workload.
+
+    When the resolved backend compiles Pallas kernels (pallas on a real
+    TPU) — or a ``timer(z, q, cfg) -> seconds`` is injected — each
+    candidate is measured on the end-to-end apply path: first the
+    ``tile_boxes`` sweep at ``stage_width=1``, then the stage-width sweep
+    at the winning tile. Otherwise (reference backend, or interpret mode
+    where timings are noise) a lane-geometry heuristic picks the tile.
+
+    Returns ``(tuned_cfg, trials)`` with trials
+    ``[(tile_boxes, stage_width, seconds|None), ...]``.
+    """
+    be = get_backend(backend, cfg)
+    measurable = timer is not None or (be.name == "pallas"
+                                       and not default_interpret())
+    if not measurable:
+        tuned = heuristic_tiles(cfg)
+        return tuned, [(tuned.tile_boxes, tuned.stage_width, None)]
+
+    z = jnp.asarray(z)
+    if z.ndim == 2:                       # batched sample: time one row
+        z = z[0]
+        q = None if q is None else jnp.asarray(q)[0]
+    q = jnp.ones(z.shape, cfg.complex_dtype) if q is None else jnp.asarray(q)
+    timer = timer or _apply_timer(be.name, repeats)
+
+    trials: list = []
+
+    def measure(tb: int, sw: int) -> float:
+        c = dataclasses.replace(cfg, tile_boxes=tb, stage_width=sw)
+        t = float(timer(z, q, c))
+        trials.append((tb, sw, t))
+        return t
+
+    best_tb = min(tile_candidates(cfg), key=lambda tb: measure(tb, 1))
+    # sw=1 was already measured in the tile sweep; reuse that time
+    sw_times = {1: min(t for tb, sw, t in trials
+                       if tb == best_tb and sw == 1)}
+    for sw in (2, 4):
+        if best_tb * sw <= 128:
+            sw_times[sw] = measure(best_tb, sw)
+    best_sw = min(sw_times, key=sw_times.get)
+    return (dataclasses.replace(cfg, tile_boxes=best_tb,
+                                stage_width=best_sw), trials)

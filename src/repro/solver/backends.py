@@ -1,18 +1,20 @@
 """Per-phase backend registry for the FMM hot paths.
 
-The pipeline in ``repro.core.fmm`` exposes three override hooks — the
-near-field P2P sweep, the level M2L translation, and the leaf L2P
-evaluation (together ~56% of the paper's GPU runtime, Table 5.1). A
-``Backend`` bundles one implementation per hook; the registry maps names
-to backends so callers (``FmmSolver``, benchmarks, tests) pick by string:
+The pipeline in ``repro.core.fmm`` exposes four override hooks — the
+near-field P2P sweep, the level M2L translation (per-level or fused
+across all levels in one launch), and the leaf L2P evaluation (together
+~56% of the paper's GPU runtime, Table 5.1). A ``Backend`` bundles one
+implementation per hook; the registry maps names to backends so callers
+(``FmmSolver``, benchmarks, tests) pick by string:
 
   "reference"  pure-jnp oracles from ``repro.core.fmm`` (every hook None
                -> the core path runs its own sweep)
   "pallas"     the Pallas TPU kernels from ``repro.kernels`` (interpret
-               mode off-TPU); harmonic kernel only
-  "auto"       "pallas" on a TPU backend for harmonic-kernel configs,
-               "reference" otherwise — interpret-mode Pallas on CPU is a
-               correctness tool, not a fast path
+               mode off-TPU); both G-kernels (harmonic and log), the
+               downward M2L fused into a single launch
+  "auto"       "pallas" on a TPU backend, "reference" otherwise —
+               interpret-mode Pallas on CPU is a correctness tool, not a
+               fast path
 
 Third parties register additional backends with ``register_backend`` —
 e.g. a shard_map multi-chip variant — without touching the dispatch
@@ -30,8 +32,15 @@ from ..core.config import FmmConfig
 # Hook signatures (matching repro.core.fmm.fmm_evaluate):
 #   p2p(tree, conn, cfg, idx)            -> (n,) complex contribution
 #   m2l(mult, weak, centers, cfg, rho)   -> (nbox, p+1) complex
+#   m2l_fused(mult, weak, centers, cfg, rho) -> per-level list; the
+#       arguments are the *per-level* sequences (one launch, all levels)
 #   l2p(local, tree, cfg, idx)           -> (n,) complex
 PhaseImpl = Optional[Callable]
+
+
+def _platform() -> str:
+    """The JAX platform driving "auto" dispatch (monkeypatchable in tests)."""
+    return jax.default_backend()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,25 +51,23 @@ class Backend:
     for ``FmmSolver.apply_batched``; the Pallas scalar-prefetch grids do
     not batch, so the batched path falls back to the reference sweeps
     when this is False.
-    ``supports(cfg)`` gates dispatch (the Pallas kernels implement only
-    the paper's harmonic kernel).
+    ``supports(cfg)`` gates dispatch (config/kernel compatibility).
     """
 
     name: str
     p2p: PhaseImpl = None
     m2l: PhaseImpl = None
     l2p: PhaseImpl = None
+    m2l_fused: PhaseImpl = None
     vmap_safe: bool = True
 
     def supports(self, cfg: FmmConfig) -> bool:
-        if self.name == "pallas":
-            return cfg.kernel == "harmonic"
         return True
 
     def phase_impls(self, cfg: FmmConfig) -> dict:
         """kwargs for ``fmm_evaluate`` selecting this backend's hooks."""
         return {"p2p_impl": self.p2p, "m2l_impl": self.m2l,
-                "l2p_impl": self.l2p}
+                "l2p_impl": self.l2p, "m2l_fused_impl": self.m2l_fused}
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -90,8 +97,8 @@ def get_backend(name: str, cfg: FmmConfig | None = None) -> Backend:
 
 def _resolve_auto(cfg: FmmConfig | None) -> Backend:
     pallas = _REGISTRY["pallas"]
-    if (cfg is not None and pallas.supports(cfg)
-            and jax.default_backend() == "tpu"):
+    if (_platform() == "tpu"
+            and (cfg is None or pallas.supports(cfg))):
         return pallas
     return _REGISTRY["reference"]
 
@@ -101,7 +108,8 @@ def _make_reference() -> Backend:
 
 
 def _make_pallas() -> Backend:
-    from ..kernels import l2p_apply, m2l_level_apply, p2p_apply
+    from ..kernels import (l2p_apply, m2l_fused_apply, m2l_level_apply,
+                           p2p_apply)
 
     def p2p(tree, conn, cfg, idx):
         return p2p_apply(tree, conn, cfg, idx)
@@ -109,11 +117,14 @@ def _make_pallas() -> Backend:
     def m2l(mult, weak, centers, cfg, rho):
         return m2l_level_apply(mult, weak, centers, cfg, rho)
 
+    def m2l_fused(mult, weak, centers, cfg, rho):
+        return m2l_fused_apply(mult, weak, centers, cfg, rho)
+
     def l2p(local, tree, cfg, idx):
         return l2p_apply(local, tree, cfg, idx)
 
     return Backend(name="pallas", p2p=p2p, m2l=m2l, l2p=l2p,
-                   vmap_safe=False)
+                   m2l_fused=m2l_fused, vmap_safe=False)
 
 
 register_backend(_make_reference())

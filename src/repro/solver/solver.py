@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from ..core.config import FmmConfig
 from ..core.connectivity import connectivity_stats
 from ..core.fmm import FmmPlan, fmm_build, fmm_evaluate
-from .autotune import TuneResult, tune_caps
+from .autotune import TuneResult, tune_caps, tune_tiles
 from .backends import Backend, get_backend
 
 # LRU of compiled solvers, keyed by (cfg, resolved backend name) — so
@@ -154,15 +154,28 @@ class FmmSolver:
 
     def tune(self, z_sample: jax.Array, q_sample: jax.Array | None = None,
              *, margin: float = 1.25, round_to: int = 8,
-             max_grow: int = 6) -> "FmmSolver":
-        """Fit ``strong_cap``/``weak_cap`` to a workload sample.
+             max_grow: int = 6, tiles: bool = True,
+             tile_timer=None) -> "FmmSolver":
+        """Fit ``strong_cap``/``weak_cap`` — and the Pallas kernel tiling
+        (``tile_boxes``/``stage_width``) — to a workload sample.
 
         ``z_sample`` may be (N,) or (B, N) — a batch tunes the shared cap
-        budget to its worst row. Returns the (cached) solver for the
-        tuned config, with ``tune_result`` attached.
+        budget to its worst row. With ``tiles=True`` the tile knobs are
+        tuned at the tuned caps (timing sweep on a compiling backend,
+        lane heuristic otherwise; ``tile_timer`` injects a custom
+        ``(z, q, cfg) -> seconds`` measurement). Returns the (cached)
+        solver for the tuned config, with ``tune_result`` attached —
+        ``tune_result.cfg`` carries the tile settings alongside the caps,
+        ``tune_result.tile_trials`` the sweep.
         """
         result = tune_caps(z_sample, q_sample, self.cfg, margin=margin,
                            round_to=round_to, max_grow=max_grow)
+        if tiles:
+            tiled_cfg, tile_trials = tune_tiles(
+                z_sample, q_sample, result.cfg,
+                backend=self.backend_name, timer=tile_timer)
+            result = result._replace(cfg=tiled_cfg,
+                                     tile_trials=tuple(tile_trials))
         # Shallow copy: shares the cached compiled programs but carries
         # this caller's tune_result — concurrent tuners that land on the
         # same tuned config must not clobber each other's stats.

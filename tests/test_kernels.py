@@ -1,5 +1,6 @@
 """Pallas kernels vs their pure-jnp ref.py oracles (interpret=True on CPU),
-swept over shapes and dtypes, plus end-to-end pipeline equivalence."""
+swept over shapes, dtypes and tilings, plus end-to-end pipeline
+equivalence and the level-fused single-launch property."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -9,9 +10,9 @@ from repro.core import (FmmConfig, fmm_build, fmm_evaluate,
                         leaf_particle_index)
 from repro.core import expansions as E
 from repro.data.synthetic import particles
-from repro.kernels import (l2p_apply, l2p_pallas, l2p_ref, m2l_level_apply,
-                           nbody_direct, nbody_ref, p2p_apply, p2p_pallas,
-                           p2p_ref)
+from repro.kernels import (l2p_apply, l2p_pallas, l2p_ref, m2l_fused_apply,
+                           m2l_level_apply, nbody_direct, nbody_ref,
+                           p2p_apply, p2p_pallas, p2p_ref)
 from repro.kernels.common import dense_leaf_arrays, round_up
 
 RNG = np.random.default_rng(7)
@@ -77,8 +78,6 @@ def test_p2p_kernel_vs_ref(plan):
 
 def test_m2l_kernel_vs_ref(plan):
     cfg, pl = plan
-    if cfg.dtype == "f64":
-        pytest.skip("pallas m2l validated in f32 (TPU target dtype)")
     from repro.core.fmm import effective_radii, m2l_level, upward
     rho = effective_radii(pl.tree, cfg)
     mult = upward(pl.tree, cfg, rho)
@@ -90,8 +89,9 @@ def test_m2l_kernel_vs_ref(plan):
     ref = m2l_level(mult[l], pl.conn.weak[l], pl.tree.centers[l], cfg, mat,
                     rho[l])
     scale = np.abs(np.asarray(ref)).max()
+    tol = 2e-5 if cfg.dtype == "f32" else 1e-12
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
-                               atol=2e-5 * scale)
+                               atol=tol * scale)
 
 
 def test_l2p_kernel_vs_ref(plan):
@@ -127,6 +127,162 @@ def test_full_pipeline_with_kernels(plan):
     scale = np.abs(np.asarray(phi_ref)).max()
     np.testing.assert_allclose(np.asarray(phi), np.asarray(phi_ref),
                                atol=tol * scale)
+
+
+# ---------------------------------------------------------------------------
+# multi-box tiling: parity across tile_boxes (incl. ragged nbox % TB != 0)
+# and both G-kernels, f64 interpret mode, <= 1e-10 relative
+# ---------------------------------------------------------------------------
+
+TILINGS = [(1, 1), (2, 1), (8, 1),   # required sweep: tile_boxes in {1,2,8}
+           (3, 1), (8, 2)]           # ragged 16 % 3 != 0; staged slots
+
+
+def _tiled_plan(kernel, tile_boxes, stage_width, nlevels=2):
+    cfg = FmmConfig(n=1024, nlevels=nlevels, p=8, dtype="f64",
+                    kernel=kernel, strong_cap=40, weak_cap=64,
+                    tile_boxes=tile_boxes, stage_width=stage_width)
+    z, q = particles("normal", cfg.n, 11)   # clustered (adaptive) input
+    return cfg, fmm_build(jnp.asarray(z), jnp.asarray(q), cfg)
+
+
+@pytest.mark.parametrize("kernel", ["harmonic", "log"])
+@pytest.mark.parametrize("tb,sw", TILINGS)
+def test_p2p_tiled_vs_ref(kernel, tb, sw):
+    cfg, pl = _tiled_plan(kernel, tb, sw)
+    idx = leaf_particle_index(cfg)
+    n_pad = round_up(idx.shape[1], 128)
+    zr, zi, qr, qi, _ = dense_leaf_arrays(pl.tree.z, pl.tree.q, idx, n_pad)
+    outr, outi = p2p_pallas(pl.conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi,
+                            kernel=kernel, tile_boxes=tb, stage_width=sw,
+                            interpret=True)
+    refr, refi = p2p_ref(pl.conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi,
+                         kernel=kernel)
+    scale = np.abs(np.asarray(refr)).max()
+    np.testing.assert_allclose(np.asarray(outr), np.asarray(refr),
+                               atol=1e-10 * scale)
+    np.testing.assert_allclose(np.asarray(outi), np.asarray(refi),
+                               atol=1e-10 * scale)
+
+
+@pytest.mark.parametrize("kernel", ["harmonic", "log"])
+@pytest.mark.parametrize("tb,sw", TILINGS)
+def test_m2l_tiled_vs_ref(kernel, tb, sw):
+    from repro.core.fmm import effective_radii, m2l_level, upward
+    cfg, pl = _tiled_plan(kernel, tb, sw)
+    rho = effective_radii(pl.tree, cfg)
+    mult = upward(pl.tree, cfg, rho)
+    l = cfg.nlevels
+    got = m2l_level_apply(mult[l], pl.conn.weak[l], pl.tree.centers[l],
+                          cfg, rho[l], interpret=True)
+    mat = jnp.asarray(E.m2l_matrix(cfg.p), dtype=cfg.real_dtype)
+    ref = m2l_level(mult[l], pl.conn.weak[l], pl.tree.centers[l], cfg, mat,
+                    rho[l])
+    scale = np.abs(np.asarray(ref)).max()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-10 * scale)
+
+
+@pytest.mark.parametrize("tb", [1, 3, 8])
+def test_l2p_tiled_vs_ref(tb):
+    from repro.core.fmm import downward, l2p, upward
+    cfg, pl = _tiled_plan("harmonic", tb, 1)
+    mult = upward(pl.tree, cfg)
+    local = downward(mult, pl.tree, pl.conn, cfg)
+    idx = leaf_particle_index(cfg)
+    got = l2p_apply(local, pl.tree, cfg, idx, interpret=True)
+    ref = l2p(local, pl.tree, cfg)
+    scale = max(np.abs(np.asarray(ref)).max(), 1e-9)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-10 * scale)
+
+
+def test_tile_larger_than_nbox():
+    """nlevels=1 -> 4 boxes with tile_boxes=8: the whole level is one
+    ragged tile."""
+    cfg, pl = _tiled_plan("harmonic", 8, 1, nlevels=1)
+    idx = leaf_particle_index(cfg)
+    n_pad = round_up(idx.shape[1], 128)
+    zr, zi, qr, qi, _ = dense_leaf_arrays(pl.tree.z, pl.tree.q, idx, n_pad)
+    outr, _ = p2p_pallas(pl.conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi,
+                         tile_boxes=8, interpret=True)
+    refr, _ = p2p_ref(pl.conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi)
+    scale = np.abs(np.asarray(refr)).max()
+    np.testing.assert_allclose(np.asarray(outr), np.asarray(refr),
+                               atol=1e-10 * scale)
+
+
+# ---------------------------------------------------------------------------
+# level-fused M2L: parity with the per-level downward() on a clustered
+# distribution, and the single-pallas_call launch property
+# ---------------------------------------------------------------------------
+
+def _fused_impl(mult, weak, centers, cfg, rho):
+    return m2l_fused_apply(mult, weak, centers, cfg, rho, interpret=True)
+
+
+@pytest.mark.parametrize("kernel", ["harmonic", "log"])
+def test_downward_fused_matches_downward(kernel):
+    from repro.core.fmm import downward, downward_fused, upward
+    cfg = FmmConfig(n=2048, nlevels=3, p=8, dtype="f64", kernel=kernel,
+                    strong_cap=64, weak_cap=96, tile_boxes=8)
+    z, q = particles("normal", cfg.n, 3)   # clustered (adaptive) input
+    pl = fmm_build(jnp.asarray(z), jnp.asarray(q), cfg)
+    mult = upward(pl.tree, cfg)
+    ref = downward(mult, pl.tree, pl.conn, cfg)
+    got = downward_fused(mult, pl.tree, pl.conn, cfg, _fused_impl)
+    scale = np.abs(np.asarray(ref)).max()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-10 * scale)
+
+
+def _count_pallas_calls(jaxpr) -> int:
+    from jax.core import Jaxpr, ClosedJaxpr
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                if isinstance(sub, ClosedJaxpr):
+                    n += _count_pallas_calls(sub.jaxpr)
+                elif isinstance(sub, Jaxpr):
+                    n += _count_pallas_calls(sub)
+    return n
+
+
+def test_downward_fused_is_single_launch():
+    """The fused downward pass issues exactly one M2L pallas_call for all
+    levels; the per-level path issues one per level."""
+    from repro.core.fmm import downward_fused, downward_with, upward
+    cfg, pl = _tiled_plan("harmonic", 8, 1, nlevels=3)
+    mult = upward(pl.tree, cfg)
+
+    fused_jaxpr = jax.make_jaxpr(
+        lambda m: downward_fused(m, pl.tree, pl.conn, cfg, _fused_impl)
+    )(mult)
+    assert _count_pallas_calls(fused_jaxpr.jaxpr) == 1
+
+    def per_level(m, weak, centers, c, rho):
+        return m2l_level_apply(m, weak, centers, c, rho, interpret=True)
+
+    level_jaxpr = jax.make_jaxpr(
+        lambda m: downward_with(m, pl.tree, pl.conn, cfg, per_level)
+    )(mult)
+    assert _count_pallas_calls(level_jaxpr.jaxpr) == cfg.nlevels
+
+
+def test_solver_pallas_log_kernel_end_to_end():
+    """backend="pallas" serves log-kernel configs (no reference fallback)."""
+    from repro.solver import FmmSolver
+    cfg = FmmConfig(n=512, nlevels=2, p=8, dtype="f64", kernel="log",
+                    strong_cap=40, weak_cap=64)
+    z, q = particles("normal", cfg.n, 11)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+    ref = np.asarray(FmmSolver.build(cfg, "reference").apply(z, q))
+    got = np.asarray(FmmSolver.build(cfg, "pallas").apply(z, q))
+    scale = np.abs(ref).max()
+    assert np.abs(got - ref).max() / scale < 1e-10
 
 
 def test_l2p_pallas_shape_sweep():

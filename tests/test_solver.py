@@ -67,12 +67,18 @@ def test_unknown_backend_raises():
     assert set(available_backends()) >= {"reference", "pallas", "auto"}
 
 
-def test_pallas_backend_rejects_log_kernel():
+def test_pallas_backend_supports_log_kernel(monkeypatch):
     cfg = FmmConfig(n=64, nlevels=1, p=6, kernel="log", dtype="f64")
-    with pytest.raises(NotImplementedError):
-        FmmSolver(cfg, "pallas")
+    assert get_backend("pallas", cfg).supports(cfg)
     # "auto" must dispatch log-kernel configs somewhere that supports them
     assert get_backend("auto", cfg).supports(cfg)
+    # ...and on a TPU platform it picks pallas (no silent reference
+    # fallback for log configs)
+    from repro.solver import backends
+    monkeypatch.setattr(backends, "_platform", lambda: "tpu")
+    assert get_backend("auto", cfg).name == "pallas"
+    monkeypatch.setattr(backends, "_platform", lambda: "cpu")
+    assert get_backend("auto", cfg).name == "reference"
 
 
 # ---------------------------------------------------------------------------
@@ -165,6 +171,48 @@ def test_tune_grows_undersized_caps():
 def test_tune_unsorts_margin_validation():
     with pytest.raises(ValueError):
         tune_caps(jnp.zeros(4), None, CFG64, margin=0.5)
+
+
+# ---------------------------------------------------------------------------
+# tile autotuning (tile_boxes / stage_width)
+# ---------------------------------------------------------------------------
+
+def test_tune_returns_tile_settings_alongside_caps():
+    """Off-TPU (no meaningful timings) the lane heuristic picks the tile;
+    the result still carries tile settings next to the caps."""
+    solver = FmmSolver.build(CFG64, "reference")
+    z, q = particles("normal", CFG64.n, 5)
+    tuned = solver.tune(jnp.asarray(z), jnp.asarray(q))
+    res = tuned.tune_result
+    assert res.tile_trials, "tune() must report tile trials"
+    assert tuned.cfg.tile_boxes == res.tile_trials[-1][0]
+    assert 1 <= tuned.cfg.tile_boxes <= CFG64.nboxes
+    assert tuned.cfg.stage_width >= 1
+    # tiles can be switched off
+    res_off = solver.tune(jnp.asarray(z), jnp.asarray(q),
+                          tiles=False).tune_result
+    assert res_off.tile_trials == ()
+
+
+def test_tune_tiles_timing_sweep_picks_fastest():
+    """With an injected timer (the TPU measurement path), tune() sweeps
+    tile_boxes then stage_width and picks the fastest combination."""
+    measured = []
+
+    def timer(z, q, cfg):
+        measured.append((cfg.tile_boxes, cfg.stage_width))
+        # fastest at tile_boxes=4, stage_width=2
+        return (abs(cfg.tile_boxes - 4) + 1) * (1.5 - 0.5 *
+                                                (cfg.stage_width == 2))
+
+    solver = FmmSolver.build(CFG64, "reference")
+    z, q = particles("normal", CFG64.n, 5)
+    tuned = solver.tune(jnp.asarray(z), jnp.asarray(q), tile_timer=timer)
+    assert tuned.cfg.tile_boxes == 4
+    assert tuned.cfg.stage_width == 2
+    assert len(tuned.tune_result.tile_trials) == len(measured)
+    # the tile sweep ran at stage_width=1 over pow-2 candidates <= nboxes
+    assert {t for t, s in measured if s == 1} == {1, 2, 4, 8, 16}
 
 
 def test_solver_stats_reports_overflow_scalar():
