@@ -20,6 +20,7 @@ from repro.core import (FmmConfig, build_connectivity, build_tree,
                         leaf_particle_index)
 from repro.core import expansions as E
 from repro.core import fmm as F
+from repro.data.synthetic import particles
 from repro.kernels.common import default_interpret
 from repro.solver import get_backend
 
@@ -105,11 +106,25 @@ def phase_times(z, q, cfg: FmmConfig, repeats: int = 3,
 
     idx_np = leaf_particle_index(cfg)
     idx = jnp.asarray(idx_np)
-    if cfg.use_p2l_m2p:
-        p2l_j = jax.jit(lambda local, tree, conn: F.p2l_sweep(
-            local, tree, conn, cfg, idx, rho[cfg.nlevels]))
+    if cfg.use_p2l_m2p and cfg.nlevels > 0:
+        if be.p2l is not None:
+            p2l_j = jax.jit(lambda local, tree, conn: local
+                            + be.p2l(tree, conn, cfg, idx_np,
+                                     rho[cfg.nlevels]))
+        else:
+            p2l_j = jax.jit(lambda local, tree, conn: F.p2l_sweep(
+                local, tree, conn, cfg, idx, rho[cfg.nlevels]))
         times["p2l"], local = _timed(p2l_j, local, tree, conn,
                                      repeats=repeats)
+
+    if be.eval_fused is not None:
+        # the whole evaluation phase (L2P + M2P + P2P) is ONE launch on
+        # this backend: time it as the first-class entry it compiles to
+        ef_j = jax.jit(lambda local, leaf, tree, conn: be.eval_fused(
+            local, leaf, tree, conn, cfg, idx_np))
+        times["eval_fused"], phi = _timed(ef_j, local, mult_leaf, tree,
+                                          conn, repeats=repeats)
+        return times
 
     if be.l2p is not None:
         l2p_j = jax.jit(lambda local, tree: be.l2p(local, tree, cfg, idx_np))
@@ -131,3 +146,25 @@ def phase_times(z, q, cfg: FmmConfig, repeats: int = 3,
             phi, tree, conn, cfg, idx))
     times["p2p"], phi = _timed(p2p_j, phi, tree, conn, repeats=repeats)
     return times
+
+
+def run(n: int = 45 * 256, p: int = 10, dist: str = "uniform",
+        backend: str = "auto", repeats: int = 3):
+    """Benchmark-harness entry: per-phase rows on the *dispatched* backend.
+
+    Complements ``table5_1`` (always the reference sweeps) by timing the
+    phases the selected backend actually runs — on TPU the pallas path
+    reports the fused evaluation phase (``eval_fused``) as one entry.
+    """
+    from repro.configs.fmm2d import fmm_config
+
+    z, q = particles(dist, n, 0)
+    cfg = fmm_config(n, p=p)
+    resolved = get_backend(backend, cfg).name
+    times = phase_times(jnp.asarray(z), jnp.asarray(q), cfg,
+                        repeats=repeats, backend=resolved)
+    rows = [(f"fmm_phases/{k}", v * 1e6, resolved)
+            for k, v in times.items()]
+    rows.append(("fmm_phases/total", sum(times.values()) * 1e6,
+                 f"backend={resolved} N={n} p={p} levels={cfg.nlevels}"))
+    return rows

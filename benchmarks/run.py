@@ -38,10 +38,11 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (accuracy, batched, fig5_2, fig5_3, fig5_5, fig5_8,
-                   kernel_tiles, roofline, table5_1)
+                   fmm_phases, kernel_tiles, roofline, table5_1)
 
     quick_kwargs = {
         "table5_1": {"n": 45 * 256},
+        "fmm_phases": {"n": 45 * 256},
         "fig5_2": {"n": 1 << 13},
         "fig5_3": {"n": 1 << 12},
         "fig5_5": {},
@@ -53,6 +54,7 @@ def main() -> None:
     }
     benches = {
         "table5_1": table5_1.run,
+        "fmm_phases": fmm_phases.run,
         "fig5_2": fig5_2.run,
         "fig5_3": fig5_3.run,
         "fig5_5": fig5_5.run,

@@ -1,0 +1,117 @@
+"""Compare a fresh benchmark record against the committed baseline.
+
+    python scripts/bench_compare.py BENCH_baseline.json bench.json \
+        [--threshold 0.25] [--min-us 200] [--relative] [--all]
+
+Fails (exit 1) when any *phase timing* row — ``table5_1/*`` and
+``fmm_phases/*`` — regresses by more than ``--threshold`` (default 25%)
+relative to the baseline. Rows below ``--min-us`` in the baseline are
+skipped (timer noise dominates there), as are rows present in only one
+record (phases legitimately appear/disappear when backends change —
+e.g. l2p/m2p/p2p collapsing into eval_fused). ``--all`` widens the
+comparison to every row instead of just the phase entries.
+
+Absolute wall-clock only transfers between identical machines; the
+committed baseline and a CI runner are not. ``--relative`` (what CI
+uses) therefore normalizes every per-row ratio by the *median* ratio
+across the compared rows — a robust estimate of the machine-speed
+factor: a uniformly slower runner moves every ratio equally and the
+median divides it away, while a genuinely regressed phase sticks out
+above the median. (Deliberate trade-off: a wholesale slowdown of MOST
+phases shifts the median itself and is invisible to this mode — the
+absolute mode, run on the baseline machine, is the check for that.)
+
+CI runs this on the ``--quick`` record (see .github/workflows/ci.yml)
+and uploads both JSONs as artifacts, so the perf trajectory is both
+archived and *enforced* commit over commit.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+PHASE_PREFIXES = ("table5_1/", "fmm_phases/")
+
+
+def _rows(record: dict) -> dict[str, float]:
+    return {r["name"]: float(r["us_per_call"]) for r in record["results"]}
+
+
+def compare(baseline: dict, fresh: dict, *, threshold: float = 0.25,
+            min_us: float = 200.0, phases_only: bool = True,
+            relative: bool = False):
+    """Returns (violations, checked): (name, base_us, new_us, ratio)
+    rows whose ratio exceeds 1 + threshold. With ``relative=True`` the
+    ratio is normalized by the median ratio over the compared rows
+    (machine-speed factor), so only rows regressing *relative to the
+    rest of the record* are flagged.
+    """
+    base, new = _rows(baseline), _rows(fresh)
+    checked = []
+    for name, b_us in sorted(base.items()):
+        if phases_only and not name.startswith(PHASE_PREFIXES):
+            continue
+        if name not in new or b_us < min_us:
+            continue
+        n_us = new[name]
+        ratio = n_us / b_us if b_us > 0 else float("inf")
+        checked.append((name, b_us, n_us, ratio))
+    if relative and checked:
+        scale = statistics.median(r for _, _, _, r in checked)
+        if scale > 0:
+            checked = [(name, b, n, r / scale)
+                       for name, b, n, r in checked]
+    violations = [row for row in checked if row[3] > 1.0 + threshold]
+    return violations, checked
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional regression (0.25 = +25%%)")
+    ap.add_argument("--min-us", type=float, default=200.0,
+                    help="skip rows whose baseline is below this (noise)")
+    ap.add_argument("--relative", action="store_true",
+                    help="normalize ratios by the median ratio (portable "
+                         "across machines; catches localized regressions)")
+    ap.add_argument("--all", action="store_true",
+                    help="compare every row, not just the phase entries")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+
+    violations, checked = compare(baseline, fresh,
+                                  threshold=args.threshold,
+                                  min_us=args.min_us,
+                                  phases_only=not args.all,
+                                  relative=args.relative)
+    if not checked:
+        print("bench_compare: no comparable rows "
+              f"(baseline rev {baseline.get('rev')}, "
+              f"fresh rev {fresh.get('rev')})")
+        return 0
+    unit = "median-normalized" if args.relative else "absolute"
+    print(f"bench_compare: {baseline.get('rev')} -> {fresh.get('rev')}, "
+          f"{len(checked)} rows, threshold +{args.threshold:.0%} ({unit})")
+    for name, b_us, n_us, ratio in checked:
+        flag = "  REGRESSION" if (name, b_us, n_us, ratio) in violations \
+            else ""
+        print(f"  {name:40s} {b_us:12.1f} -> {n_us:12.1f} us "
+              f"({ratio:6.2f}x){flag}")
+    if violations:
+        print(f"bench_compare: FAIL — {len(violations)} phase(s) regressed "
+              f"more than {args.threshold:.0%}")
+        return 1
+    print("bench_compare: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -190,8 +190,21 @@ def p2l_sweep(local: jax.Array, tree: Tree, conn: Connectivity,
     return out
 
 
+def _apply_p2l(local, tree, conn, cfg: FmmConfig, rho, p2l_impl):
+    """Fold the leaf P2L contribution into ``local`` — via the reference
+    jnp scan, or a ``p2l_impl(tree, conn, cfg, idx, rho_leaf)`` hook that
+    returns the (nbox, p+1) contribution (the Pallas kernel)."""
+    if not (cfg.use_p2l_m2p and cfg.nlevels > 0):
+        return local
+    idx = leaf_particle_index(cfg)
+    if p2l_impl is None:
+        return p2l_sweep(local, tree, conn, cfg, jnp.asarray(idx),
+                         rho[cfg.nlevels])
+    return local + p2l_impl(tree, conn, cfg, idx, rho[cfg.nlevels])
+
+
 def downward(mult: list[jax.Array], tree: Tree, conn: Connectivity,
-             cfg: FmmConfig, rho=None) -> jax.Array:
+             cfg: FmmConfig, rho=None, p2l_impl=None) -> jax.Array:
     """Local coefficients at the leaf level (incl. M2L, L2L, P2L)."""
     p = cfg.p
     cdt = mult[-1].dtype
@@ -207,10 +220,7 @@ def downward(mult: list[jax.Array], tree: Tree, conn: Connectivity,
     if cfg.nlevels == 0:
         local = local + m2l_level(mult[0], conn.weak[0], tree.centers[0],
                                   cfg, m2l_mat, rho[0])
-    if cfg.use_p2l_m2p and cfg.nlevels > 0:
-        idx = jnp.asarray(leaf_particle_index(cfg))
-        local = p2l_sweep(local, tree, conn, cfg, idx, rho[cfg.nlevels])
-    return local
+    return _apply_p2l(local, tree, conn, cfg, rho, p2l_impl)
 
 
 # ---------------------------------------------------------------------------
@@ -280,10 +290,13 @@ def p2p_sweep(phi: jax.Array, tree: Tree, conn: Connectivity,
         sz = tree.z[siu]
         sq = jnp.where(smask, tree.q[siu], 0.0)
         diff = sz[:, None, :] - tz[:, :, None]            # (nb, n_t, n_s)
-        ok = smask[:, None, :] & (diff != 0)
+        # self-interaction excluded by particle identity (global rank),
+        # not position: distinct coincident particles contribute their
+        # (singular) mutual term — the sum_{j != i} semantics of eq. (1.1).
+        ok = smask[:, None, :] & (sidx[:, None, :] != idx[:, :, None])
         if cfg.kernel == "harmonic":
-            contrib = jnp.where(ok, sq[:, None, :]
-                                / jnp.where(ok, diff, 1.0), 0.0)
+            contrib = (jnp.where(ok, sq[:, None, :], 0.0)
+                       / jnp.where(ok, diff, 1.0))
         else:
             contrib = jnp.where(ok, sq[:, None, :]
                                 * jnp.log(jnp.where(ok, -diff, 1.0)), 0.0)
@@ -307,7 +320,8 @@ def fmm_build(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> FmmPlan:
 
 def fmm_evaluate(plan: FmmPlan, cfg: FmmConfig,
                  p2p_impl=None, m2l_impl=None, l2p_impl=None,
-                 m2l_fused_impl=None) -> jax.Array:
+                 m2l_fused_impl=None, p2l_impl=None,
+                 eval_fused_impl=None) -> jax.Array:
     """Run upward/downward/evaluation on a built plan; returns sorted phi.
 
     ``p2p_impl`` / ``m2l_impl`` / ``l2p_impl`` optionally override the
@@ -315,20 +329,29 @@ def fmm_evaluate(plan: FmmPlan, cfg: FmmConfig,
     ``repro.solver.backends`` for the registry that bundles them).
     ``m2l_fused_impl`` takes precedence over ``m2l_impl``: it receives the
     per-level sequences and computes the whole downward M2L in one launch
-    (see ``downward_fused``).
+    (see ``downward_fused``). ``p2l_impl`` overrides the downward P2L
+    scan (returns the (nbox, p+1) contribution). ``eval_fused_impl``
+    takes precedence over the three evaluation hooks: it computes the
+    whole evaluation phase (L2P + M2P + P2P) in one launch —
+    ``eval_fused_impl(local, mult_leaf, tree, conn, cfg, idx) -> (n,)``.
     """
     tree, conn = plan.tree, plan.conn
     mult = upward(tree, cfg)
 
     if m2l_fused_impl is not None:
-        local = downward_fused(mult, tree, conn, cfg, m2l_fused_impl)
+        local = downward_fused(mult, tree, conn, cfg, m2l_fused_impl,
+                               p2l_impl)
     elif m2l_impl is None:
-        local = downward(mult, tree, conn, cfg)
+        local = downward(mult, tree, conn, cfg, p2l_impl=p2l_impl)
     else:
-        local = downward_with(mult, tree, conn, cfg, m2l_impl)
+        local = downward_with(mult, tree, conn, cfg, m2l_impl, p2l_impl)
 
     # numpy constant (static layout): kernel wrappers derive shapes from it
     idx = leaf_particle_index(cfg)
+    if eval_fused_impl is not None:
+        return eval_fused_impl(local, mult[cfg.nlevels], tree, conn, cfg,
+                               idx)
+
     if l2p_impl is None:
         phi = l2p(local, tree, cfg)
     else:
@@ -343,7 +366,7 @@ def fmm_evaluate(plan: FmmPlan, cfg: FmmConfig,
     return phi
 
 
-def downward_with(mult, tree, conn, cfg, m2l_impl) -> jax.Array:
+def downward_with(mult, tree, conn, cfg, m2l_impl, p2l_impl=None) -> jax.Array:
     p = cfg.p
     rho = effective_radii(tree, cfg)
     local = jnp.zeros((1, p + 1), dtype=mult[-1].dtype)
@@ -354,19 +377,19 @@ def downward_with(mult, tree, conn, cfg, m2l_impl) -> jax.Array:
     if cfg.nlevels == 0:
         local = local + m2l_impl(mult[0], conn.weak[0], tree.centers[0],
                                  cfg, rho[0])
-    if cfg.use_p2l_m2p and cfg.nlevels > 0:
-        idx = jnp.asarray(leaf_particle_index(cfg))
-        local = p2l_sweep(local, tree, conn, cfg, idx, rho[cfg.nlevels])
-    return local
+    return _apply_p2l(local, tree, conn, cfg, rho, p2l_impl)
 
 
-def downward_fused(mult, tree, conn, cfg, m2l_fused_impl) -> jax.Array:
+def downward_fused(mult, tree, conn, cfg, m2l_fused_impl,
+                   p2l_impl=None) -> jax.Array:
     """Downward pass with the level-fused M2L hook (one launch, all levels).
 
     ``m2l_fused_impl(mult, weak, centers, cfg, rho)`` receives the
     per-level sequences and returns the per-level M2L contributions; the
     (cheap, inherently sequential) L2L recursion then folds them in
-    level by level, replacing the per-level launch loop.
+    level by level, replacing the per-level launch loop. ``p2l_impl``
+    optionally replaces the leaf P2L scan (one more launch, no jnp
+    fallback on the pallas path).
     """
     p = cfg.p
     rho = effective_radii(tree, cfg)
@@ -378,10 +401,7 @@ def downward_fused(mult, tree, conn, cfg, m2l_fused_impl) -> jax.Array:
         for l in range(1, cfg.nlevels + 1):
             local = l2l_level(local, tree, l, cfg, rho[l], rho[l - 1])
             local = local + contribs[l - 1]
-    if cfg.use_p2l_m2p and cfg.nlevels > 0:
-        idx = jnp.asarray(leaf_particle_index(cfg))
-        local = p2l_sweep(local, tree, conn, cfg, idx, rho[cfg.nlevels])
-    return local
+    return _apply_p2l(local, tree, conn, cfg, rho, p2l_impl)
 
 
 @functools.partial(jax.jit, static_argnums=2)

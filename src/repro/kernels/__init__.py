@@ -1,5 +1,7 @@
 """Pallas TPU kernels for the FMM hot spots (paper Table 5.1):
 
+  eval/   FUSED evaluation phase (L2P + M2P + P2P in one launch, ~56%
+          of GPU runtime) + the downward P2L kernel
   p2p/    near-field direct evaluation (43% of GPU runtime)
   m2l/    multipole-to-local level sweep (11%)
   l2p/    local evaluation (2%)
@@ -18,6 +20,8 @@ dispatches each phase through it — swap implementations per phase by
 backend name, or register new ones with ``register_backend``.
 """
 from . import common
+from .eval import eval_fused_apply, eval_fused_pallas, m2p_ref, p2l_apply, \
+    p2l_pallas
 from .p2p import p2p_apply, p2p_pallas, p2p_ref
 from .m2l import m2l_fused_apply, m2l_level_apply, m2l_pallas, m2l_ref
 from .l2p import l2p_apply, l2p_pallas, l2p_ref
@@ -25,6 +29,8 @@ from .nbody import nbody_direct, nbody_pallas, nbody_ref
 
 __all__ = [
     "common",
+    "eval_fused_apply", "eval_fused_pallas", "m2p_ref",
+    "p2l_apply", "p2l_pallas",
     "p2p_apply", "p2p_pallas", "p2p_ref",
     "m2l_fused_apply", "m2l_level_apply", "m2l_pallas", "m2l_ref",
     "l2p_apply", "l2p_pallas", "l2p_ref",

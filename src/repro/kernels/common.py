@@ -41,6 +41,21 @@ def pad_rows(a: jax.Array, nrows: int, value=0):
     return jnp.pad(a, widths, constant_values=value)
 
 
+def prefetch_row_specs(TB: int, SW: int, width: int):
+    """One ``(1, width)`` scalar-prefetch-indexed BlockSpec per staged
+    source row: spec (w, tb) DMAs the row named by list entry
+    ``[i*TB + tb, s*SW + w]`` at grid step (i, s). The list itself is the
+    first scalar-prefetch operand (``lref``)."""
+
+    def make_src_map(w, tb):
+        def src_map(i, s, lref):
+            return (lref[i * TB + tb, s * SW + w], 0)
+        return src_map
+
+    return [pl.BlockSpec((1, width), make_src_map(w, tb))
+            for w in range(SW) for tb in range(TB)]
+
+
 def staged_list_specs(lists: jax.Array, dummy: int, TB: int, SW: int,
                       width: int):
     """Tiled scalar-prefetch staging shared by the P2P and M2L kernels.
@@ -49,8 +64,7 @@ def staged_list_specs(lists: jax.Array, dummy: int, TB: int, SW: int,
     grid of ``TB``-target-box tiles — masked (-1) and padding entries
     redirected to the all-zero ``dummy`` row — and builds one
     ``(1, width)`` scalar-prefetch-indexed BlockSpec per staged source
-    row: spec (w, tb) DMAs the row named by list entry
-    ``[i*TB + tb, s*SW + w]`` at grid step (i, s).
+    row (see ``prefetch_row_specs``).
 
     Returns ``(padded_lists, src_specs, ntile)``.
     """
@@ -60,15 +74,32 @@ def staged_list_specs(lists: jax.Array, dummy: int, TB: int, SW: int,
     lists = jnp.where(lists >= 0, lists, dummy)
     lists = pad_rows(lists, ntile * TB, dummy)
     lists = jnp.pad(lists, ((0, 0), (0, S_pad - S)), constant_values=dummy)
+    return lists, prefetch_row_specs(TB, SW, width), ntile
 
-    def make_src_map(w, tb):
-        def src_map(i, s, lref):
-            return (lref[i * TB + tb, s * SW + w], 0)
-        return src_map
 
-    specs = [pl.BlockSpec((1, width), make_src_map(w, tb))
-             for w in range(SW) for tb in range(TB)]
-    return lists, specs, ntile
+def staged_multilist(lists_seq, dummy: int, TB: int, SW: int):
+    """Concatenate several interaction lists along the slot axis for one
+    fused grid: each (nbox, S_k) region is dummy-redirected and padded to
+    a multiple of ``SW`` so it owns a whole number of grid steps; the
+    combined list is row-padded for the TB-tile grid.
+
+    Returns ``(combined, ntile, region_steps)`` where ``region_steps[k]``
+    is the number of SW-wide grid steps of region k — the kernel branches
+    on ``pl.program_id(1)`` against the running step offsets to know
+    which interaction type a step carries.
+    """
+    nbox = lists_seq[0].shape[0]
+    ntile = -(-nbox // TB)
+    regions, steps = [], []
+    for lists in lists_seq:
+        S = lists.shape[1]
+        S_pad = round_up(S, SW)
+        l = jnp.where(lists >= 0, lists, dummy)
+        l = jnp.pad(l, ((0, 0), (0, S_pad - S)), constant_values=dummy)
+        regions.append(l)
+        steps.append(S_pad // SW)
+    combined = pad_rows(jnp.concatenate(regions, axis=1), ntile * TB, dummy)
+    return combined, ntile, steps
 
 
 def compiler_params(**kwargs):
@@ -111,6 +142,67 @@ def dense_leaf_arrays(z: jax.Array, q: jax.Array, idx: np.ndarray,
         return a
 
     return pack(zr), pack(zi), pack(qr), pack(qi), jnp.pad(valid, ((0, 1), (0, pad_cols)))
+
+
+def pairwise_tile(kernel: str, tzr, tzi, trk, szr, szi, qr, qi, srk):
+    """One staged P2P source tile against the resident targets.
+
+    All inputs (TB, n_pad); returns the (TB, n_pad) (real, imag)
+    contribution to accumulate. Shared by the standalone P2P kernel and
+    the fused evaluation megakernel so the kernel math (including the
+    rank-based self-exclusion) has exactly one definition.
+    """
+    dx = szr[:, None, :] - tzr[:, :, None]   # (TB, n_t, n_s): z_src - z_tgt
+    dy = szi[:, None, :] - tzi[:, :, None]
+    qr, qi = qr[:, None, :], qi[:, None, :]
+    d2 = dx * dx + dy * dy
+    # self-interaction excluded by particle identity (global rank), never
+    # by position: distinct coincident particles interact (singular
+    # contribution — the correct sum_{j != i} semantics).
+    ok = (srk[:, None, :] >= 0) & (srk[:, None, :] != trk[:, :, None])
+    if kernel == "harmonic":
+        # q / (dx + i dy) = q * (dx - i dy) / |d|^2
+        inv = jnp.where(ok, 1.0 / d2, 0.0)
+        return (((qr * dx + qi * dy) * inv).sum(axis=-1),
+                ((qi * dx - qr * dy) * inv).sum(axis=-1))
+    # q * log(z_t - z_s) = q * (log|d| + i*arg(-dx, -dy))
+    lr = jnp.where(ok, 0.5 * jnp.log(d2), 0.0)
+    li = jnp.where(ok, jnp.arctan2(-dy, -dx), 0.0)
+    return ((qr * lr - qi * li).sum(axis=-1),
+            (qr * li + qi * lr).sum(axis=-1))
+
+
+def l2p_horner(p: int, br_ref, bi_ref, tr, ti):
+    """Local-expansion Horner at pre-centered particles.
+
+    br_ref/bi_ref: (TB, P) coefficient block (ref or array; read as
+    per-row (TB, 1) columns at static lane indices); tr/ti: (TB, n_pad).
+    Returns the (TB, n_pad) (real, imag) potential. Shared by the L2P
+    kernel and the fused evaluation megakernel's output seed.
+    """
+    accr = jnp.zeros_like(tr) + br_ref[:, p:p + 1]
+    acci = jnp.zeros_like(ti) + bi_ref[:, p:p + 1]
+    for j in range(p - 1, -1, -1):
+        nr = accr * tr - acci * ti + br_ref[:, j:j + 1]
+        ni = accr * ti + acci * tr + bi_ref[:, j:j + 1]
+        accr, acci = nr, ni
+    return accr, acci
+
+
+def dense_rank_planes(idx: np.ndarray, n_pad: int) -> jax.Array:
+    """(nbox+1, n_pad) int32 global particle ranks per dense leaf slot.
+
+    Padded slots and the trailing dummy row carry -1, so rank equality
+    against a valid target rank is never spuriously true — this is the
+    plane the kernels compare to exclude self-interaction *by particle
+    identity* (rank i == rank j), not by position coincidence, so
+    distinct particles at duplicated positions still interact (their
+    mutual contribution is the kernel singularity, by definition of
+    phi_i = sum_{j != i} G(z_i, x_j)).
+    """
+    nbox, n_max = idx.shape
+    return jnp.pad(jnp.asarray(idx, jnp.int32),
+                   ((0, 1), (0, n_pad - n_max)), constant_values=-1)
 
 
 def scatter_from_leaves(values: jax.Array, idx: np.ndarray, n: int):

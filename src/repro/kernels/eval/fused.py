@@ -1,0 +1,234 @@
+"""Pallas TPU megakernel: the whole FMM evaluation phase in ONE launch.
+
+The paper's evaluation phase (L2P + M2P + P2P; §3.3, ~56% of GPU runtime
+in Table 5.1) previously ran as three device sweeps with ``phi`` making
+three HBM round-trips: an L2P write, an M2P read-modify-write scan and a
+P2P scatter-add. Cruz, Layton & Barba (arXiv:1009.3457) show the win for
+FMM GPU kernels is keeping the *target tile resident* while every
+interaction type accumulates into it; this kernel is that idea on TPU.
+
+One grid step owns a tile of ``tile_boxes`` leaf boxes. The (TB, n_pad)
+``phi`` output block stays resident in VMEM across the entire fused
+interaction list and is written to HBM exactly once:
+
+  s == 0                 seed with the L2P Horner over the (TB, P) local
+                         coefficient block (pre-centered particle planes);
+  s <  p2p_steps         P2P: pairwise (TB, n_t, n_s) tile against staged
+                         particle rows of the s-th strong-list slot;
+  s >= p2p_steps         M2P: multipole Horner in w = rho_s/(z - z0_s)
+                         against staged (1, P) multipole rows of the
+                         (s - p2p_steps)-th m2p-list slot.
+
+Both lists ride in ONE scalar-prefetch operand (``staged_multilist``):
+the p2p region's columns select particle rows, the m2p region's columns
+select multipole rows. Every staged spec family DMAs on every step — in
+the foreign region it fetches a (harmless, valid) row that the
+``pl.when`` branch never reads — which keeps the grid rectangular and
+lets Pallas double-buffer all streams uniformly.
+
+Self-interaction in the P2P branch is excluded by global particle rank
+(trk/srk planes), not position, so duplicated positions keep their
+(singular) mutual term. Both G-kernels: "harmonic" q/(z-x), "log"
+q*log(z-x).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import (compiler_params, l2p_horner, pad_rows, pairwise_tile,
+                      prefetch_row_specs, resolve_interpret,
+                      staged_multilist)
+
+
+def _make_kernel(p: int, P: int, kernel: str, TB: int, SW: int,
+                 p2p_steps: int, m2p_steps: int):
+    n = TB * SW
+
+    def body(lists_ref, tzr_ref, tzi_ref, trk_ref, tr_ref, ti_ref,
+             br_ref, bi_ref, *rest):
+        szr_refs, szi_refs = rest[:n], rest[n:2 * n]
+        sqr_refs, sqi_refs = rest[2 * n:3 * n], rest[3 * n:4 * n]
+        srk_refs = rest[4 * n:5 * n]
+        if m2p_steps:
+            ar_refs, ai_refs = rest[5 * n:6 * n], rest[6 * n:7 * n]
+            mcr_ref, mci_ref, mrho_ref = rest[7 * n:7 * n + 3]
+            outr, outi = rest[7 * n + 3], rest[7 * n + 4]
+        else:
+            outr, outi = rest[5 * n], rest[5 * n + 1]
+        s = pl.program_id(1)
+
+        def tile(refs, o):
+            return jnp.concatenate([r[...] for r in refs[o:o + TB]], axis=0)
+
+        @pl.when(s == 0)
+        def _l2p():
+            # seed phi with the local-expansion Horner: the L2P write
+            # never leaves VMEM.
+            outr[...], outi[...] = l2p_horner(p, br_ref, bi_ref,
+                                              tr_ref[...], ti_ref[...])
+
+        tzr = tzr_ref[...]                           # (TB, n_pad) targets
+        tzi = tzi_ref[...]
+
+        @pl.when(s < p2p_steps)
+        def _p2p():
+            trk = trk_ref[...]
+            for w in range(SW):
+                o = w * TB
+                dr, di = pairwise_tile(kernel, tzr, tzi, trk,
+                                       tile(szr_refs, o), tile(szi_refs, o),
+                                       tile(sqr_refs, o), tile(sqi_refs, o),
+                                       tile(srk_refs, o))
+                outr[...] += dr
+                outi[...] += di
+
+        if m2p_steps:
+            @pl.when(s >= p2p_steps)
+            def _m2p():
+                for w in range(SW):
+                    o = w * TB
+                    ar, ai = tile(ar_refs, o), tile(ai_refs, o)  # (TB, P)
+                    cr = mcr_ref[:, w:w + 1]          # (TB, 1) slot planes
+                    ci = mci_ref[:, w:w + 1]
+                    rho = mrho_ref[:, w:w + 1]
+                    dxr = tzr - cr                    # z - z0_src
+                    dxi = tzi - ci
+                    d2 = dxr * dxr + dxi * dxi
+                    # gate on SLOT validity (masked slots carry rho = 0;
+                    # effective radii are floored > 0), never on position:
+                    # a target coinciding with the source center goes
+                    # singular exactly like the reference sweep instead
+                    # of silently dropping the contribution.
+                    ok = rho > 0.0
+                    k = jnp.where(ok, 1.0 / d2, 0.0)
+                    wr = rho * dxr * k                # w = rho / (z - z0)
+                    wi = -rho * dxi * k
+                    accr = jnp.zeros_like(tzr) + ar[:, p:p + 1]
+                    acci = jnp.zeros_like(tzi) + ai[:, p:p + 1]
+                    for j in range(p - 1, 0, -1):
+                        nr = accr * wr - acci * wi + ar[:, j:j + 1]
+                        ni = accr * wi + acci * wr + ai[:, j:j + 1]
+                        accr, acci = nr, ni
+                    fr = accr * wr - acci * wi        # trailing * w (a_0 off)
+                    fi = accr * wi + acci * wr
+                    if kernel == "log":
+                        # + a_0 * log(z - z0_src)
+                        lr = jnp.where(ok, 0.5 * jnp.log(d2), 0.0)
+                        li = jnp.where(ok, jnp.arctan2(dxi, dxr), 0.0)
+                        a0r, a0i = ar[:, 0:1], ai[:, 0:1]
+                        fr = fr + a0r * lr - a0i * li
+                        fi = fi + a0r * li + a0i * lr
+                    outr[...] += jnp.where(ok, fr, 0.0)
+                    outi[...] += jnp.where(ok, fi, 0.0)
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("p", "kernel", "tile_boxes",
+                                             "stage_width", "interpret"))
+def _eval_fused_pallas(p2p_lists, m2p_lists, tzr, tzi, trk, tr, ti, br, bi,
+                       szr, szi, sqr, sqi, srk, ar, ai, mcr, mci, mrho, *,
+                       p: int, kernel: str, tile_boxes: int,
+                       stage_width: int, interpret: bool):
+    nbox = p2p_lists.shape[0]
+    n_pad = tzr.shape[1]
+    TB, SW = tile_boxes, stage_width
+    dummy = szr.shape[0] - 1                 # all-zero row in every plane
+    with_m2p = m2p_lists is not None
+    P = br.shape[1]
+
+    regions = [p2p_lists] + ([m2p_lists] if with_m2p else [])
+    lists, ntile, steps = staged_multilist(regions, dummy, TB, SW)
+    p2p_steps = steps[0]
+    m2p_steps = steps[1] if with_m2p else 0
+
+    def tgt(a, fill=0):
+        return pad_rows(a, ntile * TB, fill)
+
+    tzr, tzi, tr, ti = tgt(tzr), tgt(tzi), tgt(tr), tgt(ti)
+    br, bi, trk = tgt(br), tgt(bi), tgt(trk, -1)
+
+    def tgt_map(i, s, lref):
+        return (i, 0)
+
+    def slot_map(i, s, lref):
+        return (i, s)
+
+    part_specs = prefetch_row_specs(TB, SW, n_pad)   # particle/rank rows
+    in_specs = ([pl.BlockSpec((TB, n_pad), tgt_map)] * 5
+                + [pl.BlockSpec((TB, P), tgt_map)] * 2
+                + part_specs * 5)
+    n = TB * SW
+    operands = [lists, tzr, tzi, trk, tr, ti, br, bi,
+                *([szr] * n), *([szi] * n), *([sqr] * n), *([sqi] * n),
+                *([srk] * n)]
+    if with_m2p:
+        # slot planes span the whole fused list (zeros in the p2p region)
+        total_cols = (p2p_steps + m2p_steps) * SW
+        def slot_plane(a):
+            a = jnp.pad(a, ((0, 0), (p2p_steps * SW,
+                                     total_cols - p2p_steps * SW
+                                     - a.shape[1])))
+            return tgt(a)
+        mult_specs = prefetch_row_specs(TB, SW, P)   # multipole rows
+        in_specs += mult_specs * 2 + [pl.BlockSpec((TB, SW), slot_map)] * 3
+        operands += [*([ar] * n), *([ai] * n),
+                     slot_plane(mcr), slot_plane(mci), slot_plane(mrho)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(ntile, p2p_steps + m2p_steps),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((TB, n_pad), tgt_map),
+            pl.BlockSpec((TB, n_pad), tgt_map),
+        ],
+    )
+    dt = tzr.dtype
+    outr, outi = pl.pallas_call(
+        _make_kernel(p, P, kernel, TB, SW, p2p_steps, m2p_steps),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((ntile * TB, n_pad), dt)] * 2,
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(*operands)
+    return outr[:nbox], outi[:nbox]
+
+
+def eval_fused_pallas(p2p_lists, m2p_lists, tzr, tzi, trk, tr, ti, br, bi,
+                      szr, szi, sqr, sqi, srk, ar=None, ai=None, mcr=None,
+                      mci=None, mrho=None, *, p: int,
+                      kernel: str = "harmonic", tile_boxes: int = 8,
+                      stage_width: int = 1, interpret: bool | None = None):
+    """One launch for the whole evaluation phase (L2P + M2P + P2P).
+
+    p2p_lists/m2p_lists: (nbox, S) int32 leaf interaction lists (-1
+    masked; ``m2p_lists=None`` drops the M2P region entirely — the
+    ``use_p2l_m2p=False`` configuration). Dense planes: tzr/tzi absolute
+    target positions, trk/srk int32 global ranks (-1 padded), tr/ti
+    pre-centered normalized positions for the L2P Horner, br/bi (nbox, P)
+    local-coefficient planes, szr/szi/sqr/sqi/srk (nbox+1, n_pad) source
+    planes, ar/ai (nbox+1, P) leaf multipole planes, mcr/mci/mrho
+    (nbox, S_m2p) per-slot source-center/radius planes (masked slots 0).
+
+    Returns (outr, outi): (nbox, n_pad) — the full evaluation-phase
+    potential at the dense leaf slots, written to HBM once.
+    """
+    if m2p_lists is not None and (ar is None or mcr is None):
+        raise ValueError("m2p region needs multipole and slot planes")
+    if m2p_lists is None:
+        z2 = jnp.zeros((1, br.shape[1]), tzr.dtype)
+        ar = ai = z2
+        mcr = mci = mrho = jnp.zeros((1, 1), tzr.dtype)
+    return _eval_fused_pallas(
+        p2p_lists, m2p_lists, tzr, tzi, trk, tr, ti, br, bi,
+        szr, szi, sqr, sqi, srk, ar, ai, mcr, mci, mrho,
+        p=p, kernel=kernel, tile_boxes=tile_boxes, stage_width=stage_width,
+        interpret=resolve_interpret(interpret))

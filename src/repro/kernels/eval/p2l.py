@@ -1,0 +1,171 @@
+"""Pallas TPU kernel: direct particle -> local-expansion shifts (P2L).
+
+The Carrier-Greengard swapped-theta pairs at the leaf level route the
+*larger* box's particles directly into the *smaller* box's local
+expansion (paper §2). The reference implementation is a jnp scan over
+list slots (``core/fmm.py:p2l_sweep``); this kernel is its Pallas twin
+so the downward pass of the ``pallas`` backend no longer falls back to a
+reference sweep.
+
+Grid step = a tile of ``tile_boxes`` target boxes: the (TB, P)
+local-coefficient output block stays resident in VMEM across the whole
+p2l list; each step stages ``TB * stage_width`` source-box particle rows
+(positions + strengths) through scalar-prefetch BlockSpecs. Per staged
+row the kernel forms inv = 1/(x - z0_t) and w = rho_t * inv in vector
+registers, runs the power recurrence over the p+1 coefficients and
+lane-reduces each into its (TB, 1) output column. P2L lives in the
+*downward* launch (not the evaluation megakernel) because its output is
+local coefficients consumed by L2L/L2P — fusing it into evaluation would
+re-introduce the HBM round-trip it exists to avoid (see DESIGN.md §2).
+
+Both G-kernels: "harmonic" b~_l = rho^l sum q/(x-z0)^(l+1) and "log"
+(b~_0 = sum q log(z0-x), b~_l = -rho^l sum q/(l (x-z0)^l)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..common import (compiler_params, pad_rows, resolve_interpret,
+                      staged_list_specs)
+
+
+def _make_kernel(p: int, P: int, kernel: str, TB: int, SW: int):
+    n = TB * SW
+
+    def body(lists_ref, z0r_ref, z0i_ref, rho_ref, *rest):
+        xzr_refs, xzi_refs = rest[:n], rest[n:2 * n]
+        xqr_refs, xqi_refs = rest[2 * n:3 * n], rest[3 * n:4 * n]
+        outr, outi = rest[4 * n], rest[4 * n + 1]
+        s = pl.program_id(1)
+
+        @pl.when(s == 0)
+        def _init():
+            outr[...] = jnp.zeros_like(outr)
+            outi[...] = jnp.zeros_like(outi)
+
+        z0r = z0r_ref[...]                    # (TB, 1) target centers
+        z0i = z0i_ref[...]
+        rho = rho_ref[...]                    # (TB, 1) target radii
+
+        def tile(refs, o):
+            return jnp.concatenate([r[...] for r in refs[o:o + TB]], axis=0)
+
+        for w in range(SW):
+            o = w * TB
+            xr, xi = tile(xzr_refs, o), tile(xzi_refs, o)   # (TB, n_pad)
+            qr, qi = tile(xqr_refs, o), tile(xqi_refs, o)
+            dxr = xr - z0r                    # x - z0_t
+            dxi = xi - z0i
+            d2 = dxr * dxr + dxi * dxi
+            # d2 > 0 masks padded/dummy lanes (x = 0, q = 0) without a
+            # staged validity plane; the cost is that a real source
+            # particle EXACTLY at the target box center contributes 0
+            # where the reference scan goes singular — a measure-zero
+            # geometry (another box's particle at this box's
+            # shrink-to-fit midpoint), accepted to keep the operand
+            # count down.
+            ok = d2 > 0.0
+            k = jnp.where(ok, 1.0 / jnp.where(ok, d2, 1.0), 0.0)
+            invr = dxr * k                    # 1 / (x - z0_t)
+            invi = -dxi * k
+            wr = rho * invr                   # rho_t / (x - z0_t)
+            wi = rho * invi
+
+            def red(a):                       # lane-reduce -> (TB, 1)
+                return a.sum(axis=-1, keepdims=True)
+
+            if kernel == "harmonic":
+                pwr = qr * invr - qi * invi
+                pwi = qr * invi + qi * invr
+                cols_r, cols_i = [], []
+                for _ in range(p + 1):
+                    cols_r.append(red(pwr))
+                    cols_i.append(red(pwi))
+                    nr = pwr * wr - pwi * wi
+                    ni = pwr * wi + pwi * wr
+                    pwr, pwi = nr, ni
+            else:
+                # b~_0 = sum q log(z0 - x) = sum q log(-d)
+                lr = jnp.where(ok, 0.5 * jnp.log(jnp.where(ok, d2, 1.0)),
+                               0.0)
+                li = jnp.where(ok, jnp.arctan2(-dxi, -dxr), 0.0)
+                cols_r = [red(qr * lr - qi * li)]
+                cols_i = [red(qr * li + qi * lr)]
+                pwr = qr * wr - qi * wi
+                pwi = qr * wi + qi * wr
+                for l in range(1, p + 1):
+                    cols_r.append(-red(pwr) / l)
+                    cols_i.append(-red(pwi) / l)
+                    nr = pwr * wr - pwi * wi
+                    ni = pwr * wi + pwi * wr
+                    pwr, pwi = nr, ni
+            zpad = [jnp.zeros_like(cols_r[0])] * (P - p - 1)
+            outr[...] += jnp.concatenate(cols_r + zpad, axis=1)
+            outi[...] += jnp.concatenate(cols_i + zpad, axis=1)
+
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("p", "P", "kernel",
+                                             "tile_boxes", "stage_width",
+                                             "interpret"))
+def _p2l_pallas(lists, z0r, z0i, rho, xzr, xzi, xqr, xqi, *, p: int, P: int,
+                kernel: str, tile_boxes: int, stage_width: int,
+                interpret: bool):
+    nbox = lists.shape[0]
+    n_pad = xzr.shape[1]
+    TB, SW = tile_boxes, stage_width
+    dummy = xzr.shape[0] - 1
+
+    lists, src_specs, ntile = staged_list_specs(lists, dummy, TB, SW, n_pad)
+
+    def col(a):
+        return pad_rows(a.reshape(-1, 1), ntile * TB)
+
+    z0r, z0i, rho = col(z0r), col(z0i), col(rho)
+
+    def tgt_map(i, s, lref):
+        return (i, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(ntile, lists.shape[1] // SW),
+        in_specs=[pl.BlockSpec((TB, 1), tgt_map)] * 3 + src_specs * 4,
+        out_specs=[
+            pl.BlockSpec((TB, P), tgt_map),
+            pl.BlockSpec((TB, P), tgt_map),
+        ],
+    )
+    dt = xzr.dtype
+    n = TB * SW
+    outr, outi = pl.pallas_call(
+        _make_kernel(p, P, kernel, TB, SW),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((ntile * TB, P), dt)] * 2,
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lists, z0r, z0i, rho, *([xzr] * n), *([xzi] * n), *([xqr] * n),
+      *([xqi] * n))
+    return outr[:nbox], outi[:nbox]
+
+
+def p2l_pallas(lists, z0r, z0i, rho, xzr, xzi, xqr, xqi, *, p: int, P: int,
+               kernel: str = "harmonic", tile_boxes: int = 8,
+               stage_width: int = 1, interpret: bool | None = None):
+    """lists: (nbox, S) int32 p2l list (-1 masked). z0r/z0i/rho: (nbox,)
+    target-box center/radius; xzr/xzi/xqr/xqi: (nbox+1, n_pad) dense
+    particle planes (dummy row zero). Returns (outr, outi): (nbox, P)
+    radius-normalized local-coefficient contributions.
+    ``interpret=None`` auto-selects from the JAX platform.
+    """
+    return _p2l_pallas(lists, z0r, z0i, rho, xzr, xzi, xqr, xqi, p=p, P=P,
+                       kernel=kernel, tile_boxes=tile_boxes,
+                       stage_width=stage_width,
+                       interpret=resolve_interpret(interpret))

@@ -16,21 +16,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ..common import compiler_params, pad_rows, resolve_interpret
+from ..common import compiler_params, l2p_horner, pad_rows, resolve_interpret
 
 
 def _make_kernel(p: int):
     def kernel(br_ref, bi_ref, tr_ref, ti_ref, outr, outi):
-        tr = tr_ref[...]                    # (TB, n_pad)
-        ti = ti_ref[...]
-        accr = jnp.zeros_like(tr) + br_ref[:, p:p + 1]
-        acci = jnp.zeros_like(ti) + bi_ref[:, p:p + 1]
-        for j in range(p - 1, -1, -1):
-            nr = accr * tr - acci * ti + br_ref[:, j:j + 1]
-            ni = accr * ti + acci * tr + bi_ref[:, j:j + 1]
-            accr, acci = nr, ni
-        outr[...] = accr
-        outi[...] = acci
+        outr[...], outi[...] = l2p_horner(p, br_ref, bi_ref,
+                                          tr_ref[...], ti_ref[...])
 
     return kernel
 

@@ -4,7 +4,8 @@ from __future__ import annotations
 import numpy as np
 
 from ...core.config import FmmConfig
-from ..common import dense_leaf_arrays, round_up, scatter_from_leaves
+from ..common import (dense_leaf_arrays, dense_rank_planes, round_up,
+                      scatter_from_leaves)
 from .p2p import p2p_pallas
 
 
@@ -17,7 +18,9 @@ def p2p_apply(tree, conn, cfg: FmmConfig, idx: np.ndarray,
     idx = np.asarray(idx)
     n_pad = round_up(idx.shape[1], 128)
     zr, zi, qr, qi, _ = dense_leaf_arrays(tree.z, tree.q, idx, n_pad)
-    outr, outi = p2p_pallas(conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi,
+    rk = dense_rank_planes(idx, n_pad)
+    outr, outi = p2p_pallas(conn.p2p, zr[:-1], zi[:-1], rk[:-1],
+                            zr, zi, qr, qi, rk,
                             kernel=cfg.kernel, tile_boxes=cfg.tile_boxes,
                             stage_width=cfg.stage_width, interpret=interpret)
     return scatter_from_leaves(outr + 1j * outi, idx, cfg.n)

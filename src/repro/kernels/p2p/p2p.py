@@ -28,16 +28,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..common import (compiler_params, pad_rows, resolve_interpret,
-                      staged_list_specs)
+from ..common import (compiler_params, pad_rows, pairwise_tile,
+                      resolve_interpret, staged_list_specs)
 
 
 def _make_kernel(kernel: str, TB: int, SW: int):
-    def body(lists_ref, tzr_ref, tzi_ref, *rest):
+    def body(lists_ref, tzr_ref, tzi_ref, trk_ref, *rest):
         n = TB * SW
         szr_refs, szi_refs = rest[:n], rest[n:2 * n]
         sqr_refs, sqi_refs = rest[2 * n:3 * n], rest[3 * n:4 * n]
-        outr, outi = rest[4 * n], rest[4 * n + 1]
+        srk_refs = rest[4 * n:5 * n]
+        outr, outi = rest[5 * n], rest[5 * n + 1]
         s = pl.program_id(1)
 
         @pl.when(s == 0)
@@ -47,6 +48,7 @@ def _make_kernel(kernel: str, TB: int, SW: int):
 
         tzr = tzr_ref[...]                     # (TB, n_pad) resident targets
         tzi = tzi_ref[...]
+        trk = trk_ref[...]                     # (TB, n_pad) global ranks
         for w in range(SW):
             o = w * TB
 
@@ -54,33 +56,19 @@ def _make_kernel(kernel: str, TB: int, SW: int):
                 return jnp.concatenate([r[...] for r in refs[o:o + TB]],
                                        axis=0)
 
-            szr, szi = tile(szr_refs), tile(szi_refs)   # (TB, n_pad) sources
-            # (TB, n_t, n_s) pairwise tile: diff = z_src - z_tgt
-            dx = szr[:, None, :] - tzr[:, :, None]
-            dy = szi[:, None, :] - tzi[:, :, None]
-            qr = tile(sqr_refs)[:, None, :]
-            qi = tile(sqi_refs)[:, None, :]
-            d2 = dx * dx + dy * dy
-            ok = d2 > 0.0                      # excludes coincident + pads
-            if kernel == "harmonic":
-                # q / (dx + i dy) = q * (dx - i dy) / |d|^2
-                inv = jnp.where(ok, 1.0 / jnp.where(ok, d2, 1.0), 0.0)
-                outr[...] += ((qr * dx + qi * dy) * inv).sum(axis=-1)
-                outi[...] += ((qi * dx - qr * dy) * inv).sum(axis=-1)
-            else:
-                # q * log(z_t - z_s) = q * (log|d| + i*arg(-dx, -dy))
-                lr = jnp.where(ok, 0.5 * jnp.log(jnp.where(ok, d2, 1.0)),
-                               0.0)
-                li = jnp.where(ok, jnp.arctan2(-dy, -dx), 0.0)
-                outr[...] += (qr * lr - qi * li).sum(axis=-1)
-                outi[...] += (qr * li + qi * lr).sum(axis=-1)
+            dr, di = pairwise_tile(kernel, tzr, tzi, trk,
+                                   tile(szr_refs), tile(szi_refs),
+                                   tile(sqr_refs), tile(sqi_refs),
+                                   tile(srk_refs))
+            outr[...] += dr
+            outi[...] += di
 
     return body
 
 
 @functools.partial(jax.jit, static_argnames=("kernel", "tile_boxes",
                                              "stage_width", "interpret"))
-def _p2p_pallas(lists: jax.Array, tzr, tzi, szr, szi, sqr, sqi, *,
+def _p2p_pallas(lists: jax.Array, tzr, tzi, trk, szr, szi, sqr, sqi, srk, *,
                 kernel: str, tile_boxes: int, stage_width: int,
                 interpret: bool):
     nbox = lists.shape[0]
@@ -91,6 +79,7 @@ def _p2p_pallas(lists: jax.Array, tzr, tzi, szr, szi, sqr, sqi, *,
     lists, src_specs, ntile = staged_list_specs(lists, dummy, TB, SW, n_pad)
     tzr = pad_rows(tzr, ntile * TB)
     tzi = pad_rows(tzi, ntile * TB)
+    trk = pad_rows(trk, ntile * TB, -1)
 
     def tgt_map(i, s, lref):
         return (i, 0)
@@ -99,7 +88,8 @@ def _p2p_pallas(lists: jax.Array, tzr, tzi, szr, szi, sqr, sqi, *,
         num_scalar_prefetch=1,
         grid=(ntile, lists.shape[1] // SW),
         in_specs=[pl.BlockSpec((TB, n_pad), tgt_map),
-                  pl.BlockSpec((TB, n_pad), tgt_map)] + src_specs * 4,
+                  pl.BlockSpec((TB, n_pad), tgt_map),
+                  pl.BlockSpec((TB, n_pad), tgt_map)] + src_specs * 5,
         out_specs=[
             pl.BlockSpec((TB, n_pad), tgt_map),
             pl.BlockSpec((TB, n_pad), tgt_map),
@@ -115,19 +105,22 @@ def _p2p_pallas(lists: jax.Array, tzr, tzi, szr, szi, sqr, sqi, *,
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(lists, tzr, tzi, *([szr] * n), *([szi] * n), *([sqr] * n),
-      *([sqi] * n))
+    )(lists, tzr, tzi, trk, *([szr] * n), *([szi] * n), *([sqr] * n),
+      *([sqi] * n), *([srk] * n))
     return outr[:nbox], outi[:nbox]
 
 
-def p2p_pallas(lists: jax.Array, tzr, tzi, szr, szi, sqr, sqi, *,
+def p2p_pallas(lists: jax.Array, tzr, tzi, trk, szr, szi, sqr, sqi, srk, *,
                kernel: str = "harmonic", tile_boxes: int = 8,
                stage_width: int = 1, interpret: bool | None = None):
-    """lists: (nbox, S) int32 (-1 masked). Dense planes: (nbox[+1], n_pad).
+    """lists: (nbox, S) int32 (-1 masked). Dense planes: (nbox[+1], n_pad);
+    trk/srk: int32 global-rank planes (-1 in padded slots / dummy row) —
+    self-interaction is excluded where source rank == target rank.
 
     Returns (outr, outi): (nbox, n_pad) potential at the dense leaf slots.
     ``interpret=None`` auto-selects from the JAX platform (compiled on TPU).
     """
-    return _p2p_pallas(lists, tzr, tzi, szr, szi, sqr, sqi, kernel=kernel,
-                       tile_boxes=tile_boxes, stage_width=stage_width,
+    return _p2p_pallas(lists, tzr, tzi, trk, szr, szi, sqr, sqi, srk,
+                       kernel=kernel, tile_boxes=tile_boxes,
+                       stage_width=stage_width,
                        interpret=resolve_interpret(interpret))

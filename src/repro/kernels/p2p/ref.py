@@ -4,18 +4,26 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def p2p_ref(lists, tzr, tzi, szr, szi, sqr, sqi, kernel: str = "harmonic"):
-    """Same contract as p2p_pallas; returns (outr, outi) of (nbox, n_pad)."""
+def p2p_ref(lists, tzr, tzi, trk, szr, szi, sqr, sqi, srk,
+            kernel: str = "harmonic"):
+    """Same contract as p2p_pallas; returns (outr, outi) of (nbox, n_pad).
+
+    Self-interaction is excluded by global rank identity (trk/srk planes,
+    -1 in padded slots), not by position coincidence: distinct particles
+    at duplicated positions contribute their (singular) mutual term.
+    """
     nbox, S = lists.shape
     dummy = szr.shape[0] - 1
     lists = jnp.where(lists >= 0, lists, dummy)
     tz = tzr + 1j * tzi                      # (nbox, n_pad)
     sz = (szr + 1j * szi)[lists]             # (nbox, S, n_pad)
     sq = (sqr + 1j * sqi)[lists]
+    srkL = srk[lists]                        # (nbox, S, n_pad)
     diff = sz[:, None, :, :] - tz[:, :, None, None]   # (nbox, n_t, S, n_s)
-    ok = diff != 0
+    ok = ((srkL[:, None, :, :] >= 0)
+          & (srkL[:, None, :, :] != trk[:, :, None, None]))
     if kernel == "harmonic":
-        c = jnp.where(ok, sq[:, None, :, :] / jnp.where(ok, diff, 1.0), 0.0)
+        c = jnp.where(ok, sq[:, None, :, :], 0.0) / jnp.where(ok, diff, 1.0)
     else:
         c = jnp.where(ok, sq[:, None, :, :]
                       * jnp.log(jnp.where(ok, -diff, 1.0)), 0.0)

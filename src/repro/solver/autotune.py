@@ -36,7 +36,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from ..core.config import FmmConfig
+from ..core.config import FmmConfig, max_leaf_size
 from ..core.connectivity import connectivity_stats
 from ..core.fmm import fmm_build
 from ..kernels.common import default_interpret
@@ -50,6 +50,9 @@ class TuneResult(NamedTuple):
     stats: dict             # connectivity stats at the tuned caps
     trials: list            # [(strong_cap, weak_cap, overflow), ...]
     tile_trials: tuple = ()  # ((tile_boxes, stage_width, seconds|None), ...)
+    dispatched: tuple = ()   # (("apply", backend), ("apply_batched", ...)):
+    #                          what the tuned solver ACTUALLY runs per
+    #                          entry point (see FmmSolver.dispatched)
 
 
 def _round_up(x: int, m: int) -> int:
@@ -119,15 +122,49 @@ def tune_caps(z: jax.Array, q: jax.Array | None, cfg: FmmConfig, *,
 # kernel-tile tuning (tile_boxes / stage_width, DESIGN.md §2)
 # ---------------------------------------------------------------------------
 
-def tile_candidates(cfg: FmmConfig) -> list[int]:
-    """Pow-2 ``tile_boxes`` candidates up to the leaf-level box count."""
-    return [t for t in (1, 2, 4, 8, 16) if t <= cfg.nboxes] or [1]
+# Budget for the fused evaluation kernel's VMEM working set. TPU cores
+# carry ~16 MB of VMEM; half is left for Pallas double-buffer headroom
+# and the compiler's own scratch.
+EVAL_VMEM_BUDGET = 8 * 2**20
+
+
+def eval_fused_vmem_bytes(cfg: FmmConfig, tile_boxes: int | None = None,
+                          stage_width: int | None = None) -> int:
+    """VMEM working-set estimate of the fused evaluation kernel.
+
+    Per grid step the kernel holds resident: 5 (TB, n_pad) target planes
+    (positions, ranks, pre-centered), 2 (TB, P) local blocks and the
+    2 (TB, n_pad) revisited phi blocks; it streams TB*SW staged source
+    rows of every plane family (5 particle + 2 multipole) plus 3 (TB, SW)
+    slot planes, double-buffered by Pallas (x2). The (TB, n_t, n_s)
+    pairwise P2P tile lives in vector registers and is excluded.
+    """
+    TB = cfg.tile_boxes if tile_boxes is None else tile_boxes
+    SW = cfg.stage_width if stage_width is None else stage_width
+    n_pad = -(-max_leaf_size(cfg) // 128) * 128
+    P = -(-(cfg.p + 1) // 128) * 128
+    itemsize = 8 if cfg.dtype == "f64" else 4
+    resident = TB * (7 * n_pad + 2 * P)
+    staged = TB * SW * (5 * n_pad + 2 * P) + 3 * TB * SW
+    return (resident + 2 * staged) * itemsize
+
+
+def tile_candidates(cfg: FmmConfig,
+                    vmem_budget: int = EVAL_VMEM_BUDGET) -> list[int]:
+    """Pow-2 ``tile_boxes`` candidates up to the leaf-level box count,
+    filtered to tiles whose fused-evaluation working set fits the VMEM
+    budget (large-leaf configs cap the useful tile)."""
+    cands = [t for t in (1, 2, 4, 8, 16) if t <= cfg.nboxes] or [1]
+    fit = [t for t in cands
+           if eval_fused_vmem_bytes(cfg, tile_boxes=t) <= vmem_budget]
+    return fit or cands[:1]
 
 
 def heuristic_tiles(cfg: FmmConfig) -> FmmConfig:
     """Lane-geometry default when timing is unavailable: the largest
-    pow-2 tile <= min(8 sublanes, nboxes) fills the f32 vector registers;
-    one staged slot keeps the VMEM working set minimal."""
+    pow-2 tile <= min(8 sublanes, nboxes) that keeps the fused evaluation
+    kernel inside the VMEM budget fills the f32 vector registers; one
+    staged slot keeps the working set minimal."""
     tb = max(t for t in tile_candidates(cfg) if t <= 8)
     return dataclasses.replace(cfg, tile_boxes=tb, stage_width=1)
 
@@ -197,7 +234,11 @@ def tune_tiles(z: jax.Array, q: jax.Array | None, cfg: FmmConfig, *,
     sw_times = {1: min(t for tb, sw, t in trials
                        if tb == best_tb and sw == 1)}
     for sw in (2, 4):
-        if best_tb * sw <= 128:
+        # staged slots multiply the streamed rows: respect both the
+        # operand-count bound and the fused-eval VMEM budget
+        if (best_tb * sw <= 128
+                and eval_fused_vmem_bytes(cfg, best_tb, sw)
+                <= EVAL_VMEM_BUDGET):
             sw_times[sw] = measure(best_tb, sw)
     best_sw = min(sw_times, key=sw_times.get)
     return (dataclasses.replace(cfg, tile_boxes=best_tb,

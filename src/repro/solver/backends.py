@@ -1,17 +1,21 @@
 """Per-phase backend registry for the FMM hot paths.
 
-The pipeline in ``repro.core.fmm`` exposes four override hooks — the
+The pipeline in ``repro.core.fmm`` exposes six override hooks — the
 near-field P2P sweep, the level M2L translation (per-level or fused
-across all levels in one launch), and the leaf L2P evaluation (together
-~56% of the paper's GPU runtime, Table 5.1). A ``Backend`` bundles one
-implementation per hook; the registry maps names to backends so callers
-(``FmmSolver``, benchmarks, tests) pick by string:
+across all levels in one launch), the leaf L2P evaluation, the downward
+P2L shift, and the fused whole-evaluation-phase hook (L2P + M2P + P2P in
+one launch; the evaluation phase is ~56% of the paper's GPU runtime,
+Table 5.1). A ``Backend`` bundles one implementation per hook; the
+registry maps names to backends so callers (``FmmSolver``, benchmarks,
+tests) pick by string:
 
   "reference"  pure-jnp oracles from ``repro.core.fmm`` (every hook None
                -> the core path runs its own sweep)
   "pallas"     the Pallas TPU kernels from ``repro.kernels`` (interpret
                mode off-TPU); both G-kernels (harmonic and log), the
-               downward M2L fused into a single launch
+               downward M2L fused into a single launch, P2L as a kernel,
+               and the whole evaluation phase as ONE fused launch — no
+               phase of the default config falls back to a jnp sweep
   "auto"       "pallas" on a TPU backend, "reference" otherwise —
                interpret-mode Pallas on CPU is a correctness tool, not a
                fast path
@@ -35,6 +39,11 @@ from ..core.config import FmmConfig
 #   m2l_fused(mult, weak, centers, cfg, rho) -> per-level list; the
 #       arguments are the *per-level* sequences (one launch, all levels)
 #   l2p(local, tree, cfg, idx)           -> (n,) complex
+#   p2l(tree, conn, cfg, idx, rho_leaf)  -> (nbox, p+1) complex
+#       contribution folded into the downward local coefficients
+#   eval_fused(local, mult_leaf, tree, conn, cfg, idx) -> (n,) complex:
+#       the WHOLE evaluation phase (L2P + M2P + P2P) in one launch;
+#       takes precedence over p2p/l2p
 PhaseImpl = Optional[Callable]
 
 
@@ -59,6 +68,8 @@ class Backend:
     m2l: PhaseImpl = None
     l2p: PhaseImpl = None
     m2l_fused: PhaseImpl = None
+    p2l: PhaseImpl = None
+    eval_fused: PhaseImpl = None
     vmap_safe: bool = True
 
     def supports(self, cfg: FmmConfig) -> bool:
@@ -67,7 +78,8 @@ class Backend:
     def phase_impls(self, cfg: FmmConfig) -> dict:
         """kwargs for ``fmm_evaluate`` selecting this backend's hooks."""
         return {"p2p_impl": self.p2p, "m2l_impl": self.m2l,
-                "l2p_impl": self.l2p, "m2l_fused_impl": self.m2l_fused}
+                "l2p_impl": self.l2p, "m2l_fused_impl": self.m2l_fused,
+                "p2l_impl": self.p2l, "eval_fused_impl": self.eval_fused}
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -108,8 +120,8 @@ def _make_reference() -> Backend:
 
 
 def _make_pallas() -> Backend:
-    from ..kernels import (l2p_apply, m2l_fused_apply, m2l_level_apply,
-                           p2p_apply)
+    from ..kernels import (eval_fused_apply, l2p_apply, m2l_fused_apply,
+                           m2l_level_apply, p2l_apply, p2p_apply)
 
     def p2p(tree, conn, cfg, idx):
         return p2p_apply(tree, conn, cfg, idx)
@@ -123,8 +135,15 @@ def _make_pallas() -> Backend:
     def l2p(local, tree, cfg, idx):
         return l2p_apply(local, tree, cfg, idx)
 
+    def p2l(tree, conn, cfg, idx, rho):
+        return p2l_apply(tree, conn, cfg, idx, rho)
+
+    def eval_fused(local, mult_leaf, tree, conn, cfg, idx):
+        return eval_fused_apply(local, mult_leaf, tree, conn, cfg, idx)
+
     return Backend(name="pallas", p2p=p2p, m2l=m2l, l2p=l2p,
-                   m2l_fused=m2l_fused, vmap_safe=False)
+                   m2l_fused=m2l_fused, p2l=p2l, eval_fused=eval_fused,
+                   vmap_safe=False)
 
 
 register_backend(_make_reference())

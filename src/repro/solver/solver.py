@@ -23,6 +23,7 @@ Pallas TPU kernels and the pure-jnp reference sweeps per phase.
 from __future__ import annotations
 
 import copy
+import warnings
 from collections import OrderedDict
 from typing import Optional
 
@@ -66,6 +67,15 @@ class FmmSolver:
         # sweeps (same answer, jnp path).
         batched_impls = (self._impls if self.backend.vmap_safe
                          else get_backend("reference").phase_impls(cfg))
+        # Record what each entry point ACTUALLY runs, so benchmark and
+        # serving numbers cannot silently be attributed to the wrong
+        # backend (the batched downgrade also warns once, below).
+        self.dispatched = {
+            "apply": self.backend.name,
+            "apply_batched": (self.backend.name if self.backend.vmap_safe
+                              else "reference"),
+        }
+        self._warned_batched_fallback = False
         self._apply = jax.jit(self._make_core(self._impls))
         self._apply_batched = jax.jit(jax.vmap(self._make_core(batched_impls)))
         self.tune_result: Optional[TuneResult] = None
@@ -135,11 +145,25 @@ class FmmSolver:
 
         ``z``/``q``: (B, N) with the same ``FmmConfig`` (one shared cap
         budget). Returns (B, N) potentials, each row in its input order.
+
+        A non-vmap-safe backend (pallas: scalar-prefetch grids don't
+        batch) serves this entry through the reference sweeps; the
+        downgrade is recorded in ``self.dispatched["apply_batched"]``
+        and warned about once per solver.
         """
         if z.ndim != 2:
             raise ValueError(f"apply_batched wants (B, N); got {z.shape}")
         if z.shape[-1] != self.cfg.n:
             raise ValueError(f"N={z.shape[-1]} != cfg.n={self.cfg.n}")
+        if (self.dispatched["apply_batched"] != self.backend.name
+                and not self._warned_batched_fallback):
+            self._warned_batched_fallback = True
+            warnings.warn(
+                f"backend {self.backend.name!r} is not vmap-safe: "
+                f"apply_batched dispatches the "
+                f"{self.dispatched['apply_batched']!r} sweeps instead "
+                "(same answer; do not attribute batched timings to "
+                f"{self.backend.name!r})", RuntimeWarning, stacklevel=2)
         return self._apply_batched(z, q)
 
     def plan(self, z: jax.Array, q: jax.Array) -> FmmPlan:
@@ -180,5 +204,7 @@ class FmmSolver:
         # this caller's tune_result — concurrent tuners that land on the
         # same tuned config must not clobber each other's stats.
         tuned = copy.copy(FmmSolver.build(result.cfg, self.backend_name))
+        result = result._replace(
+            dispatched=tuple(sorted(tuned.dispatched.items())))
         tuned.tune_result = result
         return tuned

@@ -1,0 +1,17 @@
+"""Shared jaxpr-inspection helpers for the launch-count tests."""
+
+
+def count_pallas_calls(jaxpr) -> int:
+    """Recursively count pallas_call eqns in a jaxpr (incl. sub-jaxprs)."""
+    from jax.core import Jaxpr, ClosedJaxpr
+    n = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pallas_call":
+            n += 1
+        for v in eqn.params.values():
+            for sub in (v if isinstance(v, (list, tuple)) else [v]):
+                if isinstance(sub, ClosedJaxpr):
+                    n += count_pallas_calls(sub.jaxpr)
+                elif isinstance(sub, Jaxpr):
+                    n += count_pallas_calls(sub)
+    return n

@@ -1,0 +1,103 @@
+"""The CI perf gate: scripts/bench_compare.py vs BENCH_baseline.json."""
+import importlib.util
+import json
+import pathlib
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+_spec = importlib.util.spec_from_file_location(
+    "bench_compare", REPO / "scripts" / "bench_compare.py")
+bc = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bc)
+
+
+def _rec(rows, rev="test"):
+    return {"rev": rev,
+            "results": [{"name": n, "us_per_call": u, "derived": ""}
+                        for n, u in rows]}
+
+
+def test_compare_passes_within_threshold():
+    base = _rec([("table5_1/p2p", 1000.0), ("fmm_phases/sort", 500.0)])
+    fresh = _rec([("table5_1/p2p", 1200.0), ("fmm_phases/sort", 400.0)])
+    violations, checked = bc.compare(base, fresh, threshold=0.25)
+    assert not violations
+    assert len(checked) == 2
+
+
+def test_compare_fails_on_regression():
+    base = _rec([("fmm_phases/p2p", 1000.0)])
+    fresh = _rec([("fmm_phases/p2p", 1300.0)])
+    violations, _ = bc.compare(base, fresh, threshold=0.25)
+    assert [v[0] for v in violations] == ["fmm_phases/p2p"]
+
+
+def test_compare_skips_noise_missing_and_nonphase_rows():
+    base = _rec([("fmm_phases/connect", 50.0),      # below min_us: noise
+                 ("fmm_phases/l2p", 1000.0),        # gone in fresh (fused)
+                 ("accuracy/err", 1000.0)])         # not a phase row
+    fresh = _rec([("fmm_phases/connect", 500.0),
+                  ("fmm_phases/eval_fused", 900.0),
+                  ("accuracy/err", 9000.0)])
+    violations, checked = bc.compare(base, fresh, threshold=0.25,
+                                     min_us=200.0)
+    assert not violations and not checked
+    # --all widens to every matching row
+    violations, checked = bc.compare(base, fresh, threshold=0.25,
+                                     min_us=200.0, phases_only=False)
+    assert [v[0] for v in violations] == ["accuracy/err"]
+
+
+def test_relative_mode_is_machine_portable():
+    """CI normalizes per-row ratios by the record's median ratio: a
+    uniformly slower machine divides away, a genuinely regressed phase
+    sticks out above the median."""
+    base = _rec([("fmm_phases/p2p", 1000.0), ("fmm_phases/sort", 1000.0),
+                 ("fmm_phases/m2l", 1000.0)])
+    slower = _rec([("fmm_phases/p2p", 3000.0), ("fmm_phases/sort", 3000.0),
+                   ("fmm_phases/m2l", 3000.0)])
+    v_abs, _ = bc.compare(base, slower)
+    assert v_abs                          # absolute us: false positive
+    v_rel, checked = bc.compare(base, slower, relative=True)
+    assert checked and not v_rel          # relative: clean
+
+
+def test_relative_mode_flags_localized_regression_only():
+    base = _rec([("fmm_phases/p2p", 4000.0), ("fmm_phases/sort", 1000.0),
+                 ("fmm_phases/m2l", 1000.0)])
+    # p2p genuinely 2x slower; everything else flat
+    fresh = _rec([("fmm_phases/p2p", 8000.0), ("fmm_phases/sort", 1000.0),
+                  ("fmm_phases/m2l", 1000.0)])
+    v, _ = bc.compare(base, fresh, relative=True)
+    assert [row[0] for row in v] == ["fmm_phases/p2p"]
+
+
+def test_relative_mode_ignores_improvement_of_dominant_phase():
+    """A dominant phase getting FASTER must not flag untouched phases
+    (the failure mode of share-of-total normalization)."""
+    base = _rec([("fmm_phases/p2p", 8000.0), ("fmm_phases/sort", 1000.0),
+                 ("fmm_phases/m2l", 1000.0)])
+    fresh = _rec([("fmm_phases/p2p", 2000.0), ("fmm_phases/sort", 1000.0),
+                  ("fmm_phases/m2l", 1000.0)])
+    v, checked = bc.compare(base, fresh, relative=True)
+    assert checked and not v
+
+
+def test_main_exit_codes(tmp_path):
+    base = tmp_path / "base.json"
+    fresh = tmp_path / "fresh.json"
+    base.write_text(json.dumps(_rec([("fmm_phases/p2p", 1000.0)])))
+    fresh.write_text(json.dumps(_rec([("fmm_phases/p2p", 1001.0)])))
+    assert bc.main([str(base), str(fresh)]) == 0
+    fresh.write_text(json.dumps(_rec([("fmm_phases/p2p", 2000.0)])))
+    assert bc.main([str(base), str(fresh)]) == 1
+
+
+def test_committed_baseline_is_readable():
+    """The committed baseline must stay a valid record with phase rows
+    (the CI gate reads it on every push)."""
+    path = REPO / "BENCH_baseline.json"
+    assert path.exists(), "BENCH_baseline.json missing (CI perf gate)"
+    record = json.loads(path.read_text())
+    names = {r["name"] for r in record["results"]}
+    assert any(n.startswith("fmm_phases/") for n in names)
+    assert any(n.startswith("table5_1/") for n in names)

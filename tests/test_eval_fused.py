@@ -1,0 +1,226 @@
+"""The fused evaluation megakernel (L2P + M2P + P2P in one pallas_call)
+and the downward P2L kernel vs the reference core sweeps, the
+single-launch jaxpr property of the pallas path, and the rank-based
+self-interaction exclusion (duplicated positions)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _jaxpr import count_pallas_calls
+from repro.core import (FmmConfig, fmm_build, fmm_evaluate,
+                        leaf_particle_index)
+from repro.core import fmm as F
+from repro.data.synthetic import particles
+from repro.kernels import eval_fused_apply, m2p_ref, p2l_apply
+from repro.kernels.common import (dense_leaf_arrays, round_up,
+                                  scatter_from_leaves)
+from repro.solver import FmmSolver, get_backend
+
+
+def _plan(kernel="harmonic", tb=8, sw=1, nlevels=2, n=1024,
+          use_p2l_m2p=True, seed=11):
+    cfg = FmmConfig(n=n, nlevels=nlevels, p=8, dtype="f64", kernel=kernel,
+                    strong_cap=40, weak_cap=64, use_p2l_m2p=use_p2l_m2p,
+                    tile_boxes=tb, stage_width=sw)
+    z, q = particles("normal", n, seed)   # clustered (adaptive) input
+    return cfg, fmm_build(jnp.asarray(z), jnp.asarray(q), cfg)
+
+
+def _reference_evaluation(cfg, pl, local, mult_leaf):
+    """The unfused core evaluation phase: L2P (+ M2P) + P2P."""
+    idx = jnp.asarray(leaf_particle_index(cfg))
+    phi = F.l2p(local, pl.tree, cfg)
+    if cfg.use_p2l_m2p:
+        phi = F.m2p_sweep(phi, mult_leaf, pl.tree, pl.conn, cfg)
+    return F.p2p_sweep(phi, pl.tree, pl.conn, cfg, idx)
+
+
+TILINGS = [(1, 1), (2, 1), (8, 1),   # required sweep: tile_boxes in {1,2,8}
+           (3, 1), (8, 2)]           # ragged 16 % 3 != 0; staged slots
+
+
+@pytest.mark.parametrize("kernel", ["harmonic", "log"])
+@pytest.mark.parametrize("tb,sw", TILINGS)
+def test_eval_fused_tiled_vs_reference(kernel, tb, sw):
+    cfg, pl = _plan(kernel, tb, sw)
+    mult = F.upward(pl.tree, cfg)
+    local = F.downward(mult, pl.tree, pl.conn, cfg)
+    ref = _reference_evaluation(cfg, pl, local, mult[cfg.nlevels])
+    got = eval_fused_apply(local, mult[cfg.nlevels], pl.tree, pl.conn, cfg,
+                           leaf_particle_index(cfg), interpret=True)
+    scale = np.abs(np.asarray(ref)).max()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-10 * scale)
+
+
+@pytest.mark.parametrize("kernel", ["harmonic", "log"])
+def test_eval_fused_without_m2p_region(kernel):
+    """use_p2l_m2p=False drops the M2P region entirely (pure P2P+L2P)."""
+    cfg, pl = _plan(kernel, use_p2l_m2p=False)
+    mult = F.upward(pl.tree, cfg)
+    local = F.downward(mult, pl.tree, pl.conn, cfg)
+    ref = _reference_evaluation(cfg, pl, local, mult[cfg.nlevels])
+    got = eval_fused_apply(local, mult[cfg.nlevels], pl.tree, pl.conn, cfg,
+                           leaf_particle_index(cfg), interpret=True)
+    scale = np.abs(np.asarray(ref)).max()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-10 * scale)
+
+
+def test_eval_fused_tile_larger_than_nbox():
+    """nlevels=1 -> 4 boxes with tile_boxes=8: one ragged tile."""
+    cfg, pl = _plan("harmonic", tb=8, nlevels=1)
+    mult = F.upward(pl.tree, cfg)
+    local = F.downward(mult, pl.tree, pl.conn, cfg)
+    ref = _reference_evaluation(cfg, pl, local, mult[cfg.nlevels])
+    got = eval_fused_apply(local, mult[cfg.nlevels], pl.tree, pl.conn, cfg,
+                           leaf_particle_index(cfg), interpret=True)
+    scale = np.abs(np.asarray(ref)).max()
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-10 * scale)
+
+
+# ---------------------------------------------------------------------------
+# P2L kernel vs the reference scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kernel", ["harmonic", "log"])
+@pytest.mark.parametrize("tb,sw", [(8, 1), (3, 2)])
+def test_p2l_kernel_vs_sweep(kernel, tb, sw):
+    cfg, pl = _plan(kernel, tb, sw, seed=3)
+    idx = leaf_particle_index(cfg)
+    rho = F.effective_radii(pl.tree, cfg)[cfg.nlevels]
+    base = jnp.zeros((cfg.nboxes, cfg.p + 1), cfg.complex_dtype)
+    ref = F.p2l_sweep(base, pl.tree, pl.conn, cfg, jnp.asarray(idx), rho)
+    got = p2l_apply(pl.tree, pl.conn, cfg, idx, rho, interpret=True)
+    scale = max(np.abs(np.asarray(ref)).max(), 1e-12)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-10 * scale)
+
+
+def test_m2p_ref_matches_core_sweep():
+    """The dense-plane M2P oracle agrees with the core rank-order sweep."""
+    cfg, pl = _plan("log", seed=5)
+    mult = F.upward(pl.tree, cfg)
+    idx = leaf_particle_index(cfg)
+    n_pad = round_up(idx.shape[1], 128)
+    zr, zi, _, _, _ = dense_leaf_arrays(pl.tree.z, pl.tree.q, idx, n_pad)
+    c = pl.tree.centers[cfg.nlevels]
+    rho = F.effective_radii(pl.tree, cfg)[cfg.nlevels]
+    P = round_up(cfg.p + 1, 128)
+    pad = P - (cfg.p + 1)
+    ar = jnp.pad(jnp.real(mult[-1]), ((0, 1), (0, pad)))
+    ai = jnp.pad(jnp.imag(mult[-1]), ((0, 1), (0, pad)))
+    mask = pl.conn.m2p >= 0
+    src = jnp.where(mask, pl.conn.m2p, 0)
+    outr, outi = m2p_ref(pl.conn.m2p, zr[:-1], zi[:-1], ar, ai,
+                         jnp.where(mask, jnp.real(c)[src], 0.0),
+                         jnp.where(mask, jnp.imag(c)[src], 0.0),
+                         jnp.where(mask, rho[src], 0.0),
+                         cfg.p, kernel=cfg.kernel)
+    got = scatter_from_leaves(outr + 1j * outi, idx, cfg.n)
+    ref = F.m2p_sweep(jnp.zeros(cfg.n, cfg.complex_dtype), mult[-1],
+                      pl.tree, pl.conn, cfg)
+    scale = max(np.abs(np.asarray(ref)).max(), 1e-12)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=1e-10 * scale)
+
+
+# ---------------------------------------------------------------------------
+# launch-count properties (jaxpr inspection)
+# ---------------------------------------------------------------------------
+
+def _interpreted_impls(cfg):
+    impls = dict(get_backend("pallas", cfg).phase_impls(cfg))
+
+    def eval_fused(local, leaf, tree, conn, c, idx):
+        return eval_fused_apply(local, leaf, tree, conn, c, idx,
+                                interpret=True)
+
+    def p2l(tree, conn, c, idx, rho):
+        return p2l_apply(tree, conn, c, idx, rho, interpret=True)
+
+    impls["eval_fused_impl"] = eval_fused
+    impls["p2l_impl"] = p2l
+    return impls
+
+
+def test_evaluation_phase_is_single_launch():
+    """The fused evaluation phase compiles to exactly ONE pallas_call."""
+    cfg, pl = _plan("harmonic")
+    mult = F.upward(pl.tree, cfg)
+    local = F.downward(mult, pl.tree, pl.conn, cfg)
+    idx = leaf_particle_index(cfg)
+
+    jaxpr = jax.make_jaxpr(
+        lambda loc, leaf: eval_fused_apply(loc, leaf, pl.tree, pl.conn,
+                                           cfg, idx, interpret=True)
+    )(local, mult[cfg.nlevels])
+    assert count_pallas_calls(jaxpr.jaxpr) == 1
+
+
+def test_pallas_path_has_no_reference_sweeps():
+    """With the default config (use_p2l_m2p=True) the whole pallas-backend
+    fmm_evaluate is exactly 3 launches — fused downward M2L, downward P2L,
+    fused evaluation — and zero jnp fallback scans (the m2p/p2l sweeps
+    would each add a scan primitive wrapping no pallas_call)."""
+    cfg, pl = _plan("harmonic")
+    assert cfg.use_p2l_m2p   # the default configuration
+    impls = _interpreted_impls(cfg)
+
+    jaxpr = jax.make_jaxpr(
+        lambda: fmm_evaluate(pl, cfg, **impls))()
+    assert count_pallas_calls(jaxpr.jaxpr) == 3
+
+    # without the Carrier-Greengard lists there is no P2L launch
+    cfg2, pl2 = _plan("harmonic", use_p2l_m2p=False)
+    jaxpr2 = jax.make_jaxpr(
+        lambda: fmm_evaluate(pl2, cfg2, **_interpreted_impls(cfg2)))()
+    assert count_pallas_calls(jaxpr2.jaxpr) == 2
+
+
+# ---------------------------------------------------------------------------
+# rank-based self-interaction exclusion (duplicated positions)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_duplicated_positions_are_not_silently_dropped(backend):
+    """Two *distinct* particles at the same position must interact: their
+    mutual P2P term is the kernel singularity (sum over j != i by global
+    index), not a silently dropped pair. Before the rank-exclusion fix
+    the twins' phi came back finite-but-wrong; everyone else's phi must
+    stay finite and backend-independent."""
+    n = 256
+    cfg = FmmConfig(n=n, nlevels=2, p=8, dtype="f64",
+                    strong_cap=40, weak_cap=64)
+    z, q = particles("uniform", n, 7)
+    z, q = np.array(z), np.array(q)   # copies: jnp buffers are read-only
+    twins = (17, 151)
+    z[twins[1]] = z[twins[0]]             # distinct particles, same spot
+    phi = np.asarray(FmmSolver(cfg, backend).apply(jnp.asarray(z),
+                                                   jnp.asarray(q)))
+    others = np.setdiff1d(np.arange(n), twins)
+    assert not np.isfinite(phi[twins[0]]) and not np.isfinite(phi[twins[1]])
+    assert np.isfinite(phi[others]).all()
+    # non-twin entries agree with the direct index-excluded sum to FMM
+    # accuracy (the twins' doubled charge is seen by everyone else);
+    # kernel convention: G(z, x) = q / (x - z)
+    diff = z[None, :] - z[others][:, None]
+    direct = np.where(np.abs(diff) > 0, q[None, :] / np.where(
+        diff != 0, diff, 1.0), 0.0).sum(axis=1)
+    scale = np.abs(direct).max()
+    assert np.abs(phi[others] - direct).max() / scale < 1e-5
+
+
+def test_pallas_solver_end_to_end_fused():
+    """backend="pallas" (now dispatching the fused evaluation + P2L
+    kernels) still matches the reference solver end to end."""
+    cfg = FmmConfig(n=512, nlevels=2, p=8, dtype="f64",
+                    strong_cap=40, weak_cap=64)
+    z, q = particles("normal", cfg.n, 13)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+    ref = np.asarray(FmmSolver.build(cfg, "reference").apply(z, q))
+    got = np.asarray(FmmSolver.build(cfg, "pallas").apply(z, q))
+    scale = np.abs(ref).max()
+    assert np.abs(got - ref).max() / scale < 1e-10

@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from _jaxpr import count_pallas_calls
 from repro.core import (FmmConfig, fmm_build, fmm_evaluate,
                         leaf_particle_index)
 from repro.core import expansions as E
@@ -13,7 +14,8 @@ from repro.data.synthetic import particles
 from repro.kernels import (l2p_apply, l2p_pallas, l2p_ref, m2l_fused_apply,
                            m2l_level_apply, nbody_direct, nbody_ref,
                            p2p_apply, p2p_pallas, p2p_ref)
-from repro.kernels.common import dense_leaf_arrays, round_up
+from repro.kernels.common import (dense_leaf_arrays, dense_rank_planes,
+                                  round_up)
 
 RNG = np.random.default_rng(7)
 
@@ -65,9 +67,11 @@ def test_p2p_kernel_vs_ref(plan):
     idx = leaf_particle_index(cfg)
     n_pad = round_up(idx.shape[1], 128)
     zr, zi, qr, qi, _ = dense_leaf_arrays(pl.tree.z, pl.tree.q, idx, n_pad)
-    outr, outi = p2p_pallas(pl.conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi,
-                            interpret=True)
-    refr, refi = p2p_ref(pl.conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi)
+    rk = dense_rank_planes(idx, n_pad)
+    outr, outi = p2p_pallas(pl.conn.p2p, zr[:-1], zi[:-1], rk[:-1],
+                            zr, zi, qr, qi, rk, interpret=True)
+    refr, refi = p2p_ref(pl.conn.p2p, zr[:-1], zi[:-1], rk[:-1],
+                         zr, zi, qr, qi, rk)
     tol = 1e-3 if cfg.dtype == "f32" else 1e-9
     scale = np.abs(np.asarray(refr)).max()
     np.testing.assert_allclose(np.asarray(outr), np.asarray(refr),
@@ -153,11 +157,13 @@ def test_p2p_tiled_vs_ref(kernel, tb, sw):
     idx = leaf_particle_index(cfg)
     n_pad = round_up(idx.shape[1], 128)
     zr, zi, qr, qi, _ = dense_leaf_arrays(pl.tree.z, pl.tree.q, idx, n_pad)
-    outr, outi = p2p_pallas(pl.conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi,
+    rk = dense_rank_planes(idx, n_pad)
+    outr, outi = p2p_pallas(pl.conn.p2p, zr[:-1], zi[:-1], rk[:-1],
+                            zr, zi, qr, qi, rk,
                             kernel=kernel, tile_boxes=tb, stage_width=sw,
                             interpret=True)
-    refr, refi = p2p_ref(pl.conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi,
-                         kernel=kernel)
+    refr, refi = p2p_ref(pl.conn.p2p, zr[:-1], zi[:-1], rk[:-1],
+                         zr, zi, qr, qi, rk, kernel=kernel)
     scale = np.abs(np.asarray(refr)).max()
     np.testing.assert_allclose(np.asarray(outr), np.asarray(refr),
                                atol=1e-10 * scale)
@@ -204,9 +210,11 @@ def test_tile_larger_than_nbox():
     idx = leaf_particle_index(cfg)
     n_pad = round_up(idx.shape[1], 128)
     zr, zi, qr, qi, _ = dense_leaf_arrays(pl.tree.z, pl.tree.q, idx, n_pad)
-    outr, _ = p2p_pallas(pl.conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi,
-                         tile_boxes=8, interpret=True)
-    refr, _ = p2p_ref(pl.conn.p2p, zr[:-1], zi[:-1], zr, zi, qr, qi)
+    rk = dense_rank_planes(idx, n_pad)
+    outr, _ = p2p_pallas(pl.conn.p2p, zr[:-1], zi[:-1], rk[:-1],
+                         zr, zi, qr, qi, rk, tile_boxes=8, interpret=True)
+    refr, _ = p2p_ref(pl.conn.p2p, zr[:-1], zi[:-1], rk[:-1],
+                      zr, zi, qr, qi, rk)
     scale = np.abs(np.asarray(refr)).max()
     np.testing.assert_allclose(np.asarray(outr), np.asarray(refr),
                                atol=1e-10 * scale)
@@ -236,21 +244,6 @@ def test_downward_fused_matches_downward(kernel):
                                atol=1e-10 * scale)
 
 
-def _count_pallas_calls(jaxpr) -> int:
-    from jax.core import Jaxpr, ClosedJaxpr
-    n = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
-            n += 1
-        for v in eqn.params.values():
-            for sub in (v if isinstance(v, (list, tuple)) else [v]):
-                if isinstance(sub, ClosedJaxpr):
-                    n += _count_pallas_calls(sub.jaxpr)
-                elif isinstance(sub, Jaxpr):
-                    n += _count_pallas_calls(sub)
-    return n
-
-
 def test_downward_fused_is_single_launch():
     """The fused downward pass issues exactly one M2L pallas_call for all
     levels; the per-level path issues one per level."""
@@ -261,7 +254,7 @@ def test_downward_fused_is_single_launch():
     fused_jaxpr = jax.make_jaxpr(
         lambda m: downward_fused(m, pl.tree, pl.conn, cfg, _fused_impl)
     )(mult)
-    assert _count_pallas_calls(fused_jaxpr.jaxpr) == 1
+    assert count_pallas_calls(fused_jaxpr.jaxpr) == 1
 
     def per_level(m, weak, centers, c, rho):
         return m2l_level_apply(m, weak, centers, c, rho, interpret=True)
@@ -269,7 +262,7 @@ def test_downward_fused_is_single_launch():
     level_jaxpr = jax.make_jaxpr(
         lambda m: downward_with(m, pl.tree, pl.conn, cfg, per_level)
     )(mult)
-    assert _count_pallas_calls(level_jaxpr.jaxpr) == cfg.nlevels
+    assert count_pallas_calls(level_jaxpr.jaxpr) == cfg.nlevels
 
 
 def test_solver_pallas_log_kernel_end_to_end():

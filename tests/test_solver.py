@@ -113,9 +113,39 @@ def test_apply_batched_pallas_backend_falls_back_to_reference():
     cfg = FmmConfig(n=256, nlevels=2, p=8, dtype="f32",
                     strong_cap=40, weak_cap=64)
     zb, qb = _batch(2, cfg.n, dist="normal")
-    got = np.asarray(FmmSolver.build(cfg, "pallas").apply_batched(zb, qb))
+    with pytest.warns(RuntimeWarning, match="not vmap-safe"):
+        got = np.asarray(FmmSolver.build(cfg, "pallas").apply_batched(zb, qb))
     ref = np.asarray(FmmSolver.build(cfg, "reference").apply_batched(zb, qb))
     np.testing.assert_allclose(got, ref, rtol=1e-6, atol=1e-6)
+
+
+def test_dispatched_backend_is_recorded_and_fallback_warns_once():
+    """The solver records what each entry point actually runs — the
+    pallas batched path downgrades to the reference sweeps — and warns
+    exactly once per solver about the downgrade."""
+    import warnings as W
+    cfg = FmmConfig(n=128, nlevels=1, p=6, dtype="f64",
+                    strong_cap=40, weak_cap=64)
+    solver = FmmSolver(cfg, "pallas")   # fresh instance (bypass cache)
+    assert solver.dispatched == {"apply": "pallas",
+                                 "apply_batched": "reference"}
+    zb, qb = _batch(2, cfg.n)
+    with pytest.warns(RuntimeWarning, match="apply_batched dispatches"):
+        solver.apply_batched(zb, qb)
+    with W.catch_warnings():            # one-time: silent on repeat
+        W.simplefilter("error")
+        solver.apply_batched(zb, qb)
+    ref = FmmSolver(cfg, "reference")
+    assert ref.dispatched == {"apply": "reference",
+                              "apply_batched": "reference"}
+
+
+def test_tune_result_records_dispatched_backends():
+    solver = FmmSolver.build(CFG64, "reference")
+    z, q = particles("normal", CFG64.n, 5)
+    tuned = solver.tune(jnp.asarray(z), jnp.asarray(q), tiles=False)
+    assert dict(tuned.tune_result.dispatched) == {
+        "apply": "reference", "apply_batched": "reference"}
 
 
 # ---------------------------------------------------------------------------
@@ -213,6 +243,22 @@ def test_tune_tiles_timing_sweep_picks_fastest():
     assert len(tuned.tune_result.tile_trials) == len(measured)
     # the tile sweep ran at stage_width=1 over pow-2 candidates <= nboxes
     assert {t for t, s in measured if s == 1} == {1, 2, 4, 8, 16}
+
+
+def test_tile_candidates_respect_fused_eval_vmem_budget():
+    """Large-leaf configs must cap tile_boxes: the fused evaluation
+    kernel's VMEM working set scales with tile_boxes * n_pad."""
+    from repro.solver.autotune import eval_fused_vmem_bytes, tile_candidates
+    big_leaves = FmmConfig(n=1 << 15, nlevels=2, p=10, dtype="f32")
+    tight = 1 << 20
+    cands = tile_candidates(big_leaves, vmem_budget=tight)
+    assert cands and max(cands) < 16
+    assert all(eval_fused_vmem_bytes(big_leaves, tile_boxes=t) <= tight
+               for t in cands)
+    # the default budget always leaves at least one candidate
+    assert tile_candidates(big_leaves)
+    # small-leaf configs keep the full pow-2 sweep
+    assert tile_candidates(CFG64) == [1, 2, 4, 8, 16]
 
 
 def test_solver_stats_reports_overflow_scalar():
