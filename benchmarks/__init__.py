@@ -1,5 +1,5 @@
 """Benchmark harness: one module per paper table/figure (Table 5.1,
-Figs 5.2/5.3/5.5/5.8) + accuracy ledger + roofline reader."""
+Figs 5.2/5.3/5.5/5.8) + accuracy ledger + the time-stepping refresh benchmark."""
 import os
 import sys
 

@@ -1,9 +1,13 @@
 """Per-phase FMM timing on the current backend (CPU here; the same jitted
 callables run on TPU). Phases follow the paper's Table 5.1 naming.
 
-``backend`` selects the hot-phase implementations (P2P, M2L, L2P) from
-the ``repro.solver.backends`` registry — "reference" times the core jnp
-sweeps, "pallas" the TPU kernels. Off-TPU the Pallas kernels run in
+``backend`` selects the hot-phase implementations (P2P, M2L, L2P, and
+the topology phase's leaf classification) from the
+``repro.solver.backends`` registry — "reference" times the core jnp
+sweeps, "pallas" the TPU kernels. The whole topological phase (what
+``FmmSolver.refresh`` re-runs per time step) is additionally timed as
+the first-class ``topology`` entry (excluded from the total row, which
+already counts sort + connect). Off-TPU the Pallas kernels run in
 *interpret* mode — a correctness tool whose timings say nothing about
 the compiled kernels — so timing the pallas backend there is refused
 unless ``allow_interpret=True`` explicitly opts into the noise (the
@@ -59,8 +63,17 @@ def phase_times(z, q, cfg: FmmConfig, repeats: int = 3,
     build_j = jax.jit(functools.partial(build_tree, cfg=cfg))
     times["sort"], tree = _timed(build_j, z, q, repeats=repeats)
 
-    conn_j = jax.jit(functools.partial(build_connectivity, cfg=cfg))
+    conn_j = jax.jit(functools.partial(
+        build_connectivity, cfg=cfg,
+        leaf_classify_impl=be.topology_impls(cfg)["leaf_classify_impl"]))
     times["connect"], conn = _timed(conn_j, tree, repeats=repeats)
+
+    # the whole topological phase as ONE compiled entry — what
+    # FmmSolver.refresh runs per step of a time-stepping workload.
+    # Excluded from the total: it re-measures sort + connect fused.
+    topo_j = jax.jit(lambda z, q: F.fmm_build(
+        z, q, cfg, **be.topology_impls(cfg)))
+    times["topology"], _ = _timed(topo_j, z, q, repeats=repeats)
 
     rho = F.effective_radii(tree, cfg)
 
@@ -165,6 +178,7 @@ def run(n: int = 45 * 256, p: int = 10, dist: str = "uniform",
                         repeats=repeats, backend=resolved)
     rows = [(f"fmm_phases/{k}", v * 1e6, resolved)
             for k, v in times.items()]
-    rows.append(("fmm_phases/total", sum(times.values()) * 1e6,
+    total = sum(v for k, v in times.items() if k != "topology")
+    rows.append(("fmm_phases/total", total * 1e6,
                  f"backend={resolved} N={n} p={p} levels={cfg.nlevels}"))
     return rows

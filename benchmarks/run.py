@@ -1,8 +1,8 @@
-"""Benchmark harness — one module per paper table/figure plus the roofline
-reader and the kernel-tile sweep. Prints ``name,us_per_call,derived`` CSV
-(see README) and writes a machine-readable ``BENCH_<rev>.json`` next to it
-(per-row times + config) so CI can archive the perf trajectory run over
-run.
+"""Benchmark harness — one module per paper table/figure plus the
+time-stepping refresh benchmark and the kernel-tile sweep. Prints
+``name,us_per_call,derived`` CSV (see README) and writes a
+machine-readable ``BENCH_<rev>.json`` next to it (per-row times +
+config) so CI can archive the perf trajectory run over run.
 
     PYTHONPATH=src python -m benchmarks.run [--only table5_1 fig5_5 ...]
     PYTHONPATH=src python -m benchmarks.run --quick   (CI-sized inputs)
@@ -38,7 +38,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (accuracy, batched, fig5_2, fig5_3, fig5_5, fig5_8,
-                   fmm_phases, kernel_tiles, roofline, table5_1)
+                   fmm_phases, kernel_tiles, table5_1, timestep)
 
     quick_kwargs = {
         "table5_1": {"n": 45 * 256},
@@ -49,7 +49,7 @@ def main() -> None:
         "fig5_8": {"n": 1 << 13},
         "accuracy": {"n": 2048},
         "batched": {"n": 1024, "batch": 4},
-        "roofline": {},
+        "timestep": {"n": 2048, "steps": 3},
         "kernel_tiles": {"n": 1024, "repeats": 1},
     }
     benches = {
@@ -61,7 +61,7 @@ def main() -> None:
         "fig5_8": fig5_8.run,
         "accuracy": accuracy.run,
         "batched": batched.run,
-        "roofline": roofline.run,
+        "timestep": timestep.run,
         "kernel_tiles": kernel_tiles.run,
     }
     names = args.only or list(benches)

@@ -1,0 +1,89 @@
+"""Time-stepping (plan-refresh) benchmark — the vortex-method scenario.
+
+Holm, Engblom, Goude & Holmgren (arXiv:1311.1006) motivate the workload:
+particles advect a little every step, so the tree + connectivity must be
+rebuilt thousands of times under a *fixed* cap/tile budget. The cost
+model this benchmark pins down:
+
+  cold   first ``FmmSolver.refresh`` — trace + compile + build
+  refresh steady-state per-step topology rebuild (the compiled
+         single-sort build + batched connect; no re-trace)
+  apply_plan steady-state evaluation on a refreshed plan
+  step   refresh + apply_plan (one full time step's FMM work)
+
+``run`` asserts refresh ≪ cold: a time-stepping loop must pay tracing
+and compilation once, not per step — a regression here means the plan
+cache or the refresh entry point started re-tracing.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import particles
+from repro.solver import FmmSolver
+
+
+def _best_of(fn, repeats):
+    jax.block_until_ready(fn())          # warm-up: exclude trace+compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n: int = 45 * 256, p: int = 10, steps: int = 5,
+        backend: str = "auto", repeats: int = 3):
+    """Benchmark-harness entry: cold vs steady-state refresh timings."""
+    from repro.configs.fmm2d import fmm_config
+
+    z, q = particles("uniform", n, 0)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+    cfg = fmm_config(n, p=p)
+    FmmSolver.cache_clear()
+    solver = FmmSolver.build(cfg, backend)
+
+    t0 = time.perf_counter()
+    plan = solver.refresh(z, q)
+    jax.block_until_ready(plan.conn.overflow)
+    cold = time.perf_counter() - t0
+
+    # advected positions: a small deterministic drift, re-clamped to the
+    # unit square (per component — complex clip compares lexicographically)
+    # so the tuned caps remain representative
+    rng = np.random.default_rng(1)
+
+    def drifted():
+        zd = np.asarray(z) + 1e-3 * (rng.normal(size=n)
+                                     + 1j * rng.normal(size=n))
+        return jnp.asarray(np.clip(zd.real, 0, 1) + 1j * np.clip(zd.imag, 0, 1))
+
+    drifts = [drifted() for _ in range(steps)]
+
+    refresh = min(
+        _best_of(lambda zi=zi: solver.refresh(zi, q).conn.overflow, repeats)
+        for zi in drifts)
+    apply_plan = _best_of(lambda: solver.apply_plan(plan), repeats)
+    step = _best_of(
+        lambda: solver.apply_plan(solver.refresh(drifts[0], q)), repeats)
+
+    assert solver.trace_counts["build"] == 1, (
+        f"refresh re-traced ({solver.trace_counts['build']}x): the "
+        "time-stepping path must compile once")
+    assert refresh * 2 < cold, (
+        f"steady-state refresh ({refresh:.4f}s) not << cold build "
+        f"({cold:.4f}s): compile cost is leaking into the per-step path")
+
+    name = solver.dispatched["apply"]
+    return [
+        ("timestep/cold", cold * 1e6, f"backend={name} N={n}"),
+        ("timestep/refresh", refresh * 1e6, name),
+        ("timestep/apply_plan", apply_plan * 1e6, name),
+        ("timestep/step", step * 1e6,
+         f"refresh+apply_plan ratio={refresh / max(step, 1e-12):.2f}"),
+    ]

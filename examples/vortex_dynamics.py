@@ -28,10 +28,16 @@ from repro.solver import FmmSolver
 
 
 def velocity(z, gamma, solver):
-    """u + iv at each vortex (harmonic-kernel FMM, Biot-Savart in 2D)."""
-    phi = solver.apply(z, gamma.astype(z.dtype))
+    """u + iv at each vortex (harmonic-kernel FMM, Biot-Savart in 2D).
+
+    Splits the evaluation at the topology/evaluation seam
+    (``refresh`` + ``apply_plan``) so the per-step plan is available for
+    overflow monitoring without a second topology build. Returns
+    (velocity, plan)."""
+    plan = solver.refresh(z, gamma.astype(z.dtype))
+    phi = solver.apply_plan(plan)
     # phi_i = sum_j G_j/(z_j - z_i);  u - iv = phi/(2 pi i) -> conj
-    return jnp.conj(phi / (2j * jnp.pi))
+    return jnp.conj(phi / (2j * jnp.pi)), plan
 
 
 def main():
@@ -65,20 +71,23 @@ def main():
     imp0 = complex(np.sum(gamma * z0))
     t0 = time.perf_counter()
     for s in range(args.steps):
-        u1 = velocity(z, g, solver)
+        u1, plan = velocity(z, g, solver)
         zm = z + 0.5 * args.dt * u1              # RK2 midpoint
-        u2 = velocity(zm, g, solver)
+        u2, plan_mid = velocity(zm, g, solver)
         z = z + args.dt * u2
         if s % 5 == 0 or s == args.steps - 1:
             imp = complex(np.sum(gamma * np.asarray(z)))
             drift = abs(imp - imp0) / max(abs(imp0), 1e-12)
             # advected positions can drift past the t=0-tuned caps;
-            # overflow would silently drop interactions, so monitor it
-            ov = solver.stats(z, g)["overflow"]
+            # overflow would silently drop interactions, so monitor the
+            # plans of BOTH evaluations this step actually ran (two
+            # scalar reads — no extra builds)
+            ov = max(int(plan.conn.overflow), int(plan_mid.conn.overflow))
             print(f"[vortex] step {s:3d}  impulse drift {drift:.2e}  "
                   f"overflow {ov}  "
                   f"({(time.perf_counter()-t0)/(s+1):.2f} s/step avg)")
             assert ov == 0, "caps overflowed; re-tune with larger margin"
+    assert solver.trace_counts["build"] == 1, "refresh re-traced mid-run"
     sep = abs(np.mean(np.asarray(z)[:n2]) - np.mean(np.asarray(z)[n2:]))
     print(f"[vortex] final cluster separation {sep:.3f} (pair translates, "
           f"separation ~const)")

@@ -1,80 +1,10 @@
-"""Architecture registry: the 10 assigned archs + the paper's fmm2d.
+"""Problem configurations for the FMM reproduction.
 
-``get_config(name)`` returns the exact published configuration;
-``smoke_config(name)`` returns the reduced same-family variant used by the
-CPU smoke tests (full configs are exercised only via the dry-run's
-ShapeDtypeStructs — no allocation).
+``fmm2d`` is the paper's own "architecture": calibrated tree depth
+(eq. 5.2), expansion order and caps for 2D adaptive potential
+evaluation. The LM architecture registry that shipped with the seed
+scaffold was removed — it was dead weight unrelated to the paper.
 """
-from __future__ import annotations
+from .fmm2d import FMM_SHAPES, N_D, P_TERMS, SMOKE, fmm_config
 
-import dataclasses
-import importlib
-
-from ..models.config import ModelConfig
-from .shapes import SHAPES, ShapeSpec, applicable
-
-_MODULES = {
-    "dbrx-132b": "dbrx_132b",
-    "arctic-480b": "arctic_480b",
-    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
-    "qwen1.5-0.5b": "qwen1_5_0_5b",
-    "nemotron-4-340b": "nemotron_4_340b",
-    "qwen2-72b": "qwen2_72b",
-    "qwen3-0.6b": "qwen3_0_6b",
-    "llava-next-mistral-7b": "llava_next_mistral_7b",
-    "whisper-small": "whisper_small",
-    "rwkv6-1.6b": "rwkv6_1_6b",
-}
-
-ARCH_NAMES = tuple(_MODULES)
-
-
-def _module(name: str):
-    key = name if name in _MODULES else name.replace("_", "-")
-    if key not in _MODULES:
-        key = {m: k for k, m in _MODULES.items()}.get(name, None)
-    if key is None:
-        raise KeyError(f"unknown arch {name}; know {sorted(_MODULES)}")
-    return importlib.import_module(f".{_MODULES[key]}", __package__)
-
-
-def get_config(name: str) -> ModelConfig:
-    return _module(name).CONFIG
-
-
-def get_opt(name: str):
-    return _module(name).OPT
-
-
-def smoke_config(name: str) -> ModelConfig:
-    """Reduced same-family config: tiny widths/depths, same block grammar."""
-    cfg = get_config(name)
-    n_kv = 4 if cfg.n_kv == cfg.n_heads else 2
-    return dataclasses.replace(
-        cfg,
-        name=cfg.name + "-smoke",
-        n_layers=2 * len(cfg.group),
-        d_model=64,
-        n_heads=4,
-        n_kv=n_kv,
-        d_head=16,
-        d_ff=128,
-        vocab=512,
-        n_experts=min(4, cfg.n_experts) if cfg.n_experts else 0,
-        top_k=min(2, cfg.top_k),
-        enc_layers=2 if cfg.enc_layers else 0,
-        n_audio_ctx=8,
-        n_img_tokens=4 if cfg.n_img_tokens else 0,
-        img_feat_dim=16,
-        max_pos=128,
-        rwkv_head_size=16,
-        param_dtype="float32",
-        compute_dtype="float32",
-        attn_chunk=8,
-        loss_chunk=16,
-        remat="dots",
-    )
-
-
-__all__ = ["ARCH_NAMES", "get_config", "get_opt", "smoke_config",
-           "SHAPES", "ShapeSpec", "applicable"]
+__all__ = ["FMM_SHAPES", "N_D", "P_TERMS", "SMOKE", "fmm_config"]

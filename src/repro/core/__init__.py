@@ -7,8 +7,8 @@ Public API:
   direct_potential                 — O(N^2) oracle / baseline
 """
 from .config import FmmConfig, num_levels_for, max_leaf_size
-from .tree import Tree, build_tree, leaf_particle_index, leaf_ids
-from .connectivity import Connectivity, build_connectivity, connectivity_stats
+from .topology import (Tree, build_tree, leaf_particle_index, leaf_ids,
+                       Connectivity, build_connectivity, connectivity_stats)
 from .fmm import (FmmPlan, fmm_build, fmm_evaluate, fmm_potential,
                   fmm_potential_checked, fmm_potential_with_stats, p2m,
                   upward, downward, l2p)

@@ -25,8 +25,8 @@ import jax.numpy as jnp
 
 from . import expansions as E
 from .config import FmmConfig
-from .connectivity import Connectivity, build_connectivity
-from .tree import Tree, build_tree, leaf_ids, leaf_particle_index
+from .topology import (Connectivity, Tree, build_connectivity, build_tree,
+                       leaf_ids, leaf_particle_index)
 
 
 class FmmPlan(NamedTuple):
@@ -312,9 +312,15 @@ def p2p_sweep(phi: jax.Array, tree: Tree, conn: Connectivity,
 # full pipeline
 # ---------------------------------------------------------------------------
 
-def fmm_build(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> FmmPlan:
+def fmm_build(z: jax.Array, q: jax.Array, cfg: FmmConfig,
+              leaf_classify_impl=None) -> FmmPlan:
+    """Topological phase: sort (single-sort tree build) + connect.
+
+    ``leaf_classify_impl`` optionally replaces the leaf-level
+    strong/weak/swapped-theta classification (the ``Backend.leaf_classify``
+    topology hook — the Pallas kernel on the pallas backend)."""
     tree = build_tree(z, q, cfg)
-    conn = build_connectivity(tree, cfg)
+    conn = build_connectivity(tree, cfg, leaf_classify_impl=leaf_classify_impl)
     return FmmPlan(tree=tree, conn=conn)
 
 
@@ -415,11 +421,11 @@ def fmm_potential(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> jax.Array:
 
 def fmm_potential_with_stats(z, q, cfg):
     """Non-jit variant returning (phi, connectivity stats)."""
-    from .connectivity import connectivity_stats
+    from .topology import connectivity_stats
     plan = fmm_build(z, q, cfg)
     phi_sorted = fmm_evaluate(plan, cfg)
     phi = jnp.zeros_like(phi_sorted).at[plan.tree.perm].set(phi_sorted)
-    return phi, connectivity_stats(jax.device_get(plan.conn))
+    return phi, connectivity_stats(plan.conn)
 
 
 def fmm_potential_checked(z, q, cfg: FmmConfig, max_grow: int = 3):

@@ -1,0 +1,238 @@
+"""Asymmetric adaptive FMM tree (paper §2, [7]) — single-sort build.
+
+Boxes are split at the particle *median*, twice per level, along the most
+eccentric axis -> a perfectly balanced 4-ary pyramid. Because splits happen
+at exact ranks, box b at level l owns the contiguous rank-slice
+``[bounds[l][b], bounds[l][b+1])`` where the bounds depend only on (N, l):
+a *static memory layout*, which is the property the whole GPU (here: TPU)
+implementation is organized around.
+
+Single-sort scheme (DESIGN.md §8): the seed implementation re-sorted the
+full particle array once per split — ``2*nlevels`` O(N log N) lexsorts.
+This build sorts exactly **twice** (one ``argsort`` per coordinate) and
+then maintains, through every split, two id arrays ``A_x``/``A_y`` that
+are segment-contiguous at the static rank bounds and internally sorted by
+x resp. y. Each median split is then O(N) sort-free work:
+
+  * segment extents are *gathers of boundary elements* of A_x/A_y (the
+    min/max of a sorted run are its endpoints), giving the eccentric-axis
+    choice without a segmented reduction;
+  * "goes left" is a static positional predicate in the chosen axis's
+    array (the first ceil(n/2) entries of the segment), scattered to
+    particle ids;
+  * both arrays are *stable-partitioned* at the static median ranks with
+    one cumulative sum — the classic presorted kd-tree construction,
+    mapped to scatters so every step is an O(N) data-parallel primitive.
+
+The final rank order equals the lexsort cascade's for inputs with
+distinct coordinates (ties break by initial argsort order instead of the
+evolving order — a measure-zero difference on continuous inputs); the
+parity sweep in tests/test_topology.py checks bit-identical rank layout
+against ``build_tree_lexsort``, the seed implementation kept as oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..config import FmmConfig, level_bounds, segment_ids, split_bounds
+
+
+class Tree(NamedTuple):
+    """Sorted particles + per-level box geometry. All shapes static."""
+
+    perm: jax.Array          # (N,) int32; sorted_field[i] corresponds to input index perm[i]
+    z: jax.Array             # (N,) complex, rank-sorted positions
+    q: jax.Array             # (N,) complex, rank-sorted strengths
+    centers: tuple[jax.Array, ...]   # level l: (4**l,) complex
+    radii: tuple[jax.Array, ...]     # level l: (4**l,) real
+
+
+def _seg_minmax(v: jax.Array, sid: jax.Array, nseg: int):
+    mn = jax.ops.segment_min(v, sid, num_segments=nseg, indices_are_sorted=True)
+    mx = jax.ops.segment_max(v, sid, num_segments=nseg, indices_are_sorted=True)
+    return mn, mx
+
+
+def _partition(order, left_of, starts_pos, mids_pos, offs_pos):
+    """Stable-partition ``order`` within static segments by a per-id flag.
+
+    ``order``: (N,) int32 particle ids, segment-contiguous at the static
+    bounds and internally sorted by one coordinate. ``left_of``: (N,)
+    bool per particle *id*. ``starts_pos``/``mids_pos``/``offs_pos``:
+    (N,) static per-position segment start / median rank / offset within
+    the segment. Left entries keep their relative order in
+    ``[start, mid)``, right entries in ``[mid, end)`` — so both coordinate
+    orders survive every split without re-sorting.
+    """
+    f = left_of[order]
+    lefts = jnp.cumsum(f.astype(jnp.int32)) - f    # exclusive: lefts in [0, p)
+    seg_l = lefts - lefts[starts_pos]              # lefts before p in segment
+    seg_r = offs_pos - seg_l                       # rights before p in segment
+    dest = jnp.where(f, starts_pos + seg_l, mids_pos + seg_r)
+    return jnp.zeros_like(order).at[dest].set(order)
+
+
+def build_tree(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> Tree:
+    """Sort particles into the static pyramid layout and compute geometry.
+
+    Exactly two full-array sorts (one argsort per coordinate) regardless
+    of depth; everything else is cumsum/gather/scatter. The jaxpr
+    sort-count test in tests/test_topology.py pins this property.
+    """
+    rdt = cfg.real_dtype
+    cdt = cfg.complex_dtype
+    z = z.astype(cdt)
+    q = q.astype(cdt)
+    x = jnp.real(z).astype(rdt)
+    y = jnp.imag(z).astype(rdt)
+    N, L = cfg.n, cfg.nlevels
+
+    if L == 0:
+        perm = jnp.arange(N, dtype=jnp.int32)
+    else:
+        ax = jnp.argsort(x).astype(jnp.int32)      # full sort 1 (stable)
+        ay = jnp.argsort(y).astype(jnp.int32)      # full sort 2 (stable)
+        sb = split_bounds(N, 2 * L)
+        split_x = None
+        for s in range(2 * L):
+            b = sb[s]
+            mids = sb[s + 1][1::2]
+            sid_pos = segment_ids(b)                       # static (N,)
+            starts_pos = jnp.asarray(b[:-1][sid_pos])
+            mids_pos = jnp.asarray(mids[sid_pos])
+            offs_pos = jnp.asarray(np.arange(N) - b[:-1][sid_pos])
+            # sorted-run endpoints ARE the segment extents: 2 gathers/axis
+            jst, jla = jnp.asarray(b[:-1]), jnp.asarray(b[1:] - 1)
+            xmn, xmx = x[ax[jst]], x[ax[jla]]
+            ymn, ymx = y[ay[jst]], y[ay[jla]]
+            split_x = (xmx - xmn) >= (ymx - ymn)           # (2**s,)
+            # positional "first half of my segment" flag, static per rank
+            pos_left = jnp.asarray(np.arange(N) < mids[sid_pos])
+            xleft = jnp.zeros(N, bool).at[ax].set(pos_left)
+            yleft = jnp.zeros(N, bool).at[ay].set(pos_left)
+            sid_of_id = jnp.zeros(N, jnp.int32).at[ax].set(
+                jnp.asarray(sid_pos))
+            goes_left = jnp.where(split_x[sid_of_id], xleft, yleft)
+            ax = _partition(ax, goes_left, starts_pos, mids_pos, offs_pos)
+            ay = _partition(ay, goes_left, starts_pos, mids_pos, offs_pos)
+        # Final rank order within each leaf = ascending in the axis its
+        # parent split on (what the lexsort cascade leaves behind): both
+        # id arrays are leaf-contiguous at the same static bounds, so the
+        # choice is a positionwise select.
+        leaf_pos = segment_ids(sb[2 * L])                  # static (N,)
+        choose_x = split_x[jnp.asarray(leaf_pos // 2)]
+        perm = jnp.where(choose_x, ax, ay)
+
+    xs, ys = x[perm], y[perm]
+    z_sorted = (xs + 1j * ys).astype(cdt)
+    q_sorted = q[perm]
+    centers, radii = _level_geometry(xs, ys, cfg)
+    return Tree(perm=perm, z=z_sorted, q=q_sorted,
+                centers=centers, radii=radii)
+
+
+def _level_geometry(xs, ys, cfg: FmmConfig):
+    """Shrink-to-fit centers/radii for every level from ONE segmented pass.
+
+    The four segmented min/max reductions run once, over the leaf boxes;
+    every coarser level's extents are 4-child min/max reductions of the
+    (4**l,) level arrays (exact: min over a box == min of its children's
+    mins), so the O(N) geometry work is not repeated per level.
+    """
+    rdt, cdt = cfg.real_dtype, cfg.complex_dtype
+    lid = jnp.asarray(leaf_ids(cfg))
+    nb = 4 ** cfg.nlevels
+    xmn, xmx = _seg_minmax(xs, lid, nb)
+    ymn, ymx = _seg_minmax(ys, lid, nb)
+    centers: list = [None] * (cfg.nlevels + 1)
+    radii: list = [None] * (cfg.nlevels + 1)
+    for l in range(cfg.nlevels, -1, -1):
+        cx = 0.5 * (xmn + xmx)
+        cy = 0.5 * (ymn + ymx)
+        centers[l] = (cx + 1j * cy).astype(cdt)
+        radii[l] = (0.5 * jnp.hypot(xmx - xmn, ymx - ymn)).astype(rdt)
+        if l > 0:
+            xmn = xmn.reshape(-1, 4).min(axis=1)
+            xmx = xmx.reshape(-1, 4).max(axis=1)
+            ymn = ymn.reshape(-1, 4).min(axis=1)
+            ymx = ymx.reshape(-1, 4).max(axis=1)
+    return tuple(centers), tuple(radii)
+
+
+def build_tree_lexsort(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> Tree:
+    """Seed implementation (one full lexsort per split), kept as the
+    parity oracle for ``build_tree`` — see tests/test_topology.py."""
+    rdt = cfg.real_dtype
+    cdt = cfg.complex_dtype
+    z = z.astype(cdt)
+    q = q.astype(cdt)
+    x = jnp.real(z).astype(rdt)
+    y = jnp.imag(z).astype(rdt)
+    perm = jnp.arange(cfg.n, dtype=jnp.int32)
+
+    sb = split_bounds(cfg.n, 2 * cfg.nlevels)
+    for s in range(2 * cfg.nlevels):
+        nseg = 2**s
+        sid = jnp.asarray(segment_ids(sb[s]))
+        xmn, xmx = _seg_minmax(x, sid, nseg)
+        ymn, ymx = _seg_minmax(y, sid, nseg)
+        split_x = (xmx - xmn) >= (ymx - ymn)
+        coord = jnp.where(split_x[sid], x, y)
+        order = jnp.lexsort((coord, sid))
+        x, y, perm = x[order], y[order], perm[order]
+
+    z_sorted = (x + 1j * y).astype(cdt)
+    q_sorted = q[perm]
+
+    centers = []
+    radii = []
+    lb = level_bounds(cfg)
+    for l in range(cfg.nlevels + 1):
+        nseg = 4**l
+        sid = jnp.asarray(segment_ids(lb[l]))
+        xmn, xmx = _seg_minmax(x, sid, nseg)
+        ymn, ymx = _seg_minmax(y, sid, nseg)
+        cx = 0.5 * (xmn + xmx)
+        cy = 0.5 * (ymn + ymx)
+        centers.append((cx + 1j * cy).astype(cdt))
+        radii.append((0.5 * jnp.hypot(xmx - xmn, ymx - ymn)).astype(rdt))
+
+    return Tree(perm=perm, z=z_sorted, q=q_sorted,
+                centers=tuple(centers), radii=tuple(radii))
+
+
+def leaf_particle_index(cfg: FmmConfig) -> np.ndarray:
+    """(4**L, n_max) int32 gather map leaf-box -> particle ranks, -1 padded.
+
+    Purely static (depends only on N and nlevels) — this is the paper's
+    "static layout of memory" made literal: the map is a numpy constant
+    baked into the compiled program. Built by broadcasting the leaf rank
+    bounds against a column index (no per-box Python loop).
+    """
+    lb = level_bounds(cfg)[-1]
+    sizes = np.diff(lb)
+    n_max = int(sizes.max())
+    col = np.arange(n_max, dtype=np.int64)
+    idx = lb[:-1, None] + col[None, :]
+    return np.where(col[None, :] < sizes[:, None], idx, -1).astype(np.int32)
+
+
+def leaf_particle_index_loop(cfg: FmmConfig) -> np.ndarray:
+    """Seed O(4**L) Python-loop construction, kept as parity oracle."""
+    lb = level_bounds(cfg)[-1]
+    sizes = np.diff(lb)
+    n_max = int(sizes.max())
+    nbox = len(sizes)
+    idx = np.full((nbox, n_max), -1, dtype=np.int32)
+    for b in range(nbox):
+        idx[b, : sizes[b]] = np.arange(lb[b], lb[b + 1], dtype=np.int32)
+    return idx
+
+
+def leaf_ids(cfg: FmmConfig) -> np.ndarray:
+    """(N,) int32: leaf box owning each rank."""
+    return segment_ids(level_bounds(cfg)[-1])

@@ -1,4 +1,3 @@
-from .synthetic import (DataConfig, lm_batch, batch_specs, particles,
-                        Prefetcher)
+from .synthetic import DataConfig, Prefetcher, lm_batch, particles
 
-__all__ = ["DataConfig", "lm_batch", "batch_specs", "particles", "Prefetcher"]
+__all__ = ["DataConfig", "Prefetcher", "lm_batch", "particles"]

@@ -1,13 +1,10 @@
 """Deterministic synthetic data.
 
-The LM stream is *stateless*: batch contents are a pure function of
-(seed, step, shard), so any worker can regenerate any batch after a
+Streams are *stateless*: batch contents are a pure function of
+(seed, step), so any worker can regenerate any batch after a
 restart/re-shard — no data-loader state in checkpoints, which is the
-fault-tolerance-friendly design for 1000+ nodes.
-
-The token stream is a learnable mixture (modular arithmetic progressions
-with per-sequence parameters) so the end-to-end examples show a real
-decreasing loss rather than log(vocab) noise.
+fault-tolerance-friendly design for 1000+ nodes (exercised by the
+``Prefetcher``/runtime tests).
 
 ``particles`` reproduces the paper's three source distributions
 (Fig. 5.8): uniform in the unit square, N(0, 1/100) and the 'layer'
@@ -20,7 +17,6 @@ import queue
 import threading
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 
@@ -32,46 +28,19 @@ class DataConfig:
     seed: int = 0
 
 
-def lm_batch(dc: DataConfig, step: int, model_cfg=None):
-    """Batch dict for any arch; deterministic in (seed, step)."""
+def lm_batch(dc: DataConfig, step: int):
+    """Synthetic token batch, deterministic in (seed, step); used by the
+    data-pipeline/prefetcher tests."""
     rng = np.random.default_rng(np.random.PCG64((dc.seed, step)))
     useful_vocab = min(dc.vocab, 1024)
     a = rng.integers(0, useful_vocab, (dc.batch, 1))
     b = rng.integers(1, 17, (dc.batch, 1))
     t = np.arange(dc.seq + 1)[None, :]
     toks = (a + b * t) % useful_vocab
-    batch = {
+    return {
         "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
         "labels": jnp.asarray(toks[:, 1:], jnp.int32),
     }
-    if model_cfg is not None and getattr(model_cfg, "arch", "") == "encdec":
-        batch["audio"] = jnp.asarray(
-            rng.standard_normal((dc.batch, model_cfg.n_audio_ctx,
-                                 model_cfg.img_feat_dim), dtype=np.float32))
-    if model_cfg is not None and getattr(model_cfg, "arch", "") == "vlm":
-        batch["img"] = jnp.asarray(
-            rng.standard_normal((dc.batch, model_cfg.n_img_tokens,
-                                 model_cfg.img_feat_dim), dtype=np.float32))
-    return batch
-
-
-def batch_specs(model_cfg, batch: int, seq: int, dtype=jnp.int32):
-    """ShapeDtypeStruct stand-ins for every model input (dry-run)."""
-    if model_cfg.arch == "vlm":
-        text = seq - model_cfg.n_img_tokens
-        specs = {"tokens": jax.ShapeDtypeStruct((batch, text), dtype),
-                 "labels": jax.ShapeDtypeStruct((batch, text), dtype),
-                 "img": jax.ShapeDtypeStruct(
-                     (batch, model_cfg.n_img_tokens, model_cfg.img_feat_dim),
-                     jnp.float32)}
-        return specs
-    specs = {"tokens": jax.ShapeDtypeStruct((batch, seq), dtype),
-             "labels": jax.ShapeDtypeStruct((batch, seq), dtype)}
-    if model_cfg.arch == "encdec":
-        specs["audio"] = jax.ShapeDtypeStruct(
-            (batch, model_cfg.n_audio_ctx, model_cfg.img_feat_dim),
-            jnp.float32)
-    return specs
 
 
 # ---------------------------------------------------------------------------

@@ -10,8 +10,12 @@
 Each subpackage ships <name>.py (pl.pallas_call + explicit BlockSpec VMEM
 tiling), ops.py (jit'd wrapper with the FMM-pipeline contract) and ref.py
 (pure-jnp oracle). Validated with interpret=True on CPU; TPU is the target.
-The topological phase (sort 30%, connect 1%) intentionally has no kernel:
-sort/scan are XLA:TPU primitives (DESIGN.md §2).
+The topological phase's sort/scan/compaction primitives stay on XLA:TPU
+(DESIGN.md §2), but its leaf-level classification — 3/4 of all boxes —
+ships as a kernel:
+
+  topology/  leaf-level strong/weak/swapped-theta classification
+             (the ``Backend.leaf_classify`` topology hook)
 
 Consumers should not import these wrappers directly for pipeline use:
 the backend registry in ``repro.solver.backends`` bundles them as the
@@ -26,6 +30,7 @@ from .p2p import p2p_apply, p2p_pallas, p2p_ref
 from .m2l import m2l_fused_apply, m2l_level_apply, m2l_pallas, m2l_ref
 from .l2p import l2p_apply, l2p_pallas, l2p_ref
 from .nbody import nbody_direct, nbody_pallas, nbody_ref
+from .topology import leaf_classify_pallas
 
 __all__ = [
     "common",
@@ -35,4 +40,5 @@ __all__ = [
     "m2l_fused_apply", "m2l_level_apply", "m2l_pallas", "m2l_ref",
     "l2p_apply", "l2p_pallas", "l2p_ref",
     "nbody_direct", "nbody_pallas", "nbody_ref",
+    "leaf_classify_pallas",
 ]

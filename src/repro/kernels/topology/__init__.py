@@ -1,0 +1,3 @@
+from .classify import leaf_classify_pallas
+
+__all__ = ["leaf_classify_pallas"]

@@ -1,8 +1,7 @@
-"""Launchers: mesh definitions, multi-pod dry-run, train/serve entry points.
-
-NOTE: do not import .dryrun from here — it sets XLA_FLAGS at import time
-(512 host devices) and must only be imported as __main__.
-"""
+"""Deployment runtime: mesh definitions, fault-tolerant step loop, and
+HLO collective accounting — the generic substrate a production FMM
+service runs on (the LM train/serve/dry-run cells that shipped with the
+seed scaffold were removed)."""
 from .mesh import make_production_mesh, make_test_mesh, mesh_info
 from .runtime import FailureInjector, StragglerMonitor, train_loop
 

@@ -37,8 +37,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.config import FmmConfig, max_leaf_size
-from ..core.connectivity import connectivity_stats
 from ..core.fmm import fmm_build
+from ..core.topology import connectivity_stats
 from ..kernels.common import default_interpret
 from .backends import get_backend
 
@@ -70,7 +70,7 @@ def probe_caps(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> tuple[int, dict]:
     overflow, stats = 0, None
     for b in range(z.shape[0]):
         plan = fmm_build(z[b], q[b], cfg)
-        s = connectivity_stats(jax.device_get(plan.conn))
+        s = connectivity_stats(plan.conn)
         overflow = max(overflow, s["overflow"])
         if stats is None:
             stats = s

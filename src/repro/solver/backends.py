@@ -1,11 +1,13 @@
 """Per-phase backend registry for the FMM hot paths.
 
-The pipeline in ``repro.core.fmm`` exposes six override hooks — the
+The pipeline in ``repro.core.fmm`` exposes seven override hooks — the
 near-field P2P sweep, the level M2L translation (per-level or fused
 across all levels in one launch), the leaf L2P evaluation, the downward
-P2L shift, and the fused whole-evaluation-phase hook (L2P + M2P + P2P in
+P2L shift, the fused whole-evaluation-phase hook (L2P + M2P + P2P in
 one launch; the evaluation phase is ~56% of the paper's GPU runtime,
-Table 5.1). A ``Backend`` bundles one implementation per hook; the
+Table 5.1), and the topology phase's leaf-level classification
+(``fmm_build``'s ``leaf_classify_impl``). A ``Backend`` bundles one
+implementation per hook; the
 registry maps names to backends so callers (``FmmSolver``, benchmarks,
 tests) pick by string:
 
@@ -44,6 +46,11 @@ from ..core.config import FmmConfig
 #   eval_fused(local, mult_leaf, tree, conn, cfg, idx) -> (n,) complex:
 #       the WHOLE evaluation phase (L2P + M2P + P2P) in one launch;
 #       takes precedence over p2p/l2p
+#
+# Topology hooks (matching repro.core.fmm.fmm_build):
+#   leaf_classify(cand, valid, centers, radii, cfg) -> five keyed
+#       (4**L, 4S) int32 arrays (strong, weak, p2p, p2l, m2p) for the
+#       leaf-level strong/weak/swapped-theta classification
 PhaseImpl = Optional[Callable]
 
 
@@ -70,6 +77,7 @@ class Backend:
     m2l_fused: PhaseImpl = None
     p2l: PhaseImpl = None
     eval_fused: PhaseImpl = None
+    leaf_classify: PhaseImpl = None
     vmap_safe: bool = True
 
     def supports(self, cfg: FmmConfig) -> bool:
@@ -80,6 +88,11 @@ class Backend:
         return {"p2p_impl": self.p2p, "m2l_impl": self.m2l,
                 "l2p_impl": self.l2p, "m2l_fused_impl": self.m2l_fused,
                 "p2l_impl": self.p2l, "eval_fused_impl": self.eval_fused}
+
+    def topology_impls(self, cfg: FmmConfig) -> dict:
+        """kwargs for ``fmm_build`` selecting this backend's topology
+        hooks (the sort/connect phase — paper §4.1/§4.3)."""
+        return {"leaf_classify_impl": self.leaf_classify}
 
 
 _REGISTRY: dict[str, Backend] = {}
@@ -120,8 +133,9 @@ def _make_reference() -> Backend:
 
 
 def _make_pallas() -> Backend:
-    from ..kernels import (eval_fused_apply, l2p_apply, m2l_fused_apply,
-                           m2l_level_apply, p2l_apply, p2p_apply)
+    from ..kernels import (eval_fused_apply, l2p_apply, leaf_classify_pallas,
+                           m2l_fused_apply, m2l_level_apply, p2l_apply,
+                           p2p_apply)
 
     def p2p(tree, conn, cfg, idx):
         return p2p_apply(tree, conn, cfg, idx)
@@ -141,9 +155,12 @@ def _make_pallas() -> Backend:
     def eval_fused(local, mult_leaf, tree, conn, cfg, idx):
         return eval_fused_apply(local, mult_leaf, tree, conn, cfg, idx)
 
+    def leaf_classify(cand, valid, centers, radii, cfg):
+        return leaf_classify_pallas(cand, valid, centers, radii, cfg)
+
     return Backend(name="pallas", p2p=p2p, m2l=m2l, l2p=l2p,
                    m2l_fused=m2l_fused, p2l=p2l, eval_fused=eval_fused,
-                   vmap_safe=False)
+                   leaf_classify=leaf_classify, vmap_safe=False)
 
 
 register_backend(_make_reference())

@@ -8,6 +8,13 @@ downward + evaluate) behind a jit-able entry point:
     phib = solver.apply_batched(zb, qb)             # (B, N) -> (B, N)
     solver = solver.tune(z_sample)                  # fit the list caps
 
+Time-stepping workloads (vortex methods: particles move a little each
+step, topology must be refreshed thousands of times) split ``apply`` at
+the topology/evaluation seam:
+
+    plan = solver.refresh(z, q)     # device-resident sort + connect only
+    phi = solver.apply_plan(plan)   # upward/downward/evaluation
+
 ``build`` memoizes solvers by ``(FmmConfig, backend)`` so repeated calls
 share one compiled program — the plan cache. ``apply_batched`` vmaps the
 single-problem pipeline over a leading batch axis: because *all*
@@ -31,8 +38,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.config import FmmConfig
-from ..core.connectivity import connectivity_stats
 from ..core.fmm import FmmPlan, fmm_build, fmm_evaluate
+from ..core.topology import connectivity_stats
 from .autotune import TuneResult, tune_caps, tune_tiles
 from .backends import Backend, get_backend
 
@@ -62,11 +69,16 @@ class FmmSolver:
                 f"backend {self.backend.name!r} does not support "
                 f"kernel={cfg.kernel!r}")
         self._impls = self.backend.phase_impls(cfg)
+        self._topo = self.backend.topology_impls(cfg)
         # Batched path: scalar-prefetch Pallas grids don't batch, so a
         # non-vmap-safe backend serves batches through the reference
         # sweeps (same answer, jnp path).
-        batched_impls = (self._impls if self.backend.vmap_safe
-                         else get_backend("reference").phase_impls(cfg))
+        if self.backend.vmap_safe:
+            batched_impls, batched_topo = self._impls, self._topo
+        else:
+            ref = get_backend("reference")
+            batched_impls = ref.phase_impls(cfg)
+            batched_topo = ref.topology_impls(cfg)
         # Record what each entry point ACTUALLY runs, so benchmark and
         # serving numbers cannot silently be attributed to the wrong
         # backend (the batched downgrade also warns once, below).
@@ -76,8 +88,15 @@ class FmmSolver:
                               else "reference"),
         }
         self._warned_batched_fallback = False
-        self._apply = jax.jit(self._make_core(self._impls))
-        self._apply_batched = jax.jit(jax.vmap(self._make_core(batched_impls)))
+        # trace counters: the refresh/apply entry points are compiled
+        # once per solver; re-tracing on a steady-shape time-stepping
+        # loop would be a plan-cache bug (asserted in tests).
+        self.trace_counts = {"build": 0, "evaluate": 0}
+        self._apply = jax.jit(self._make_core(self._impls, self._topo))
+        self._apply_batched = jax.jit(jax.vmap(
+            self._make_core(batched_impls, batched_topo)))
+        self._refresh = jax.jit(self._make_build(self._topo))
+        self._apply_plan = jax.jit(self._make_evaluate(self._impls))
         self.tune_result: Optional[TuneResult] = None
 
     # -- construction -------------------------------------------------------
@@ -104,11 +123,31 @@ class FmmSolver:
     def cache_size(cls) -> int:
         return len(_CACHE)
 
-    def _make_core(self, impls: dict):
+    def _make_build(self, topo: dict):
+        cfg = self.cfg
+
+        def build(z: jax.Array, q: jax.Array) -> FmmPlan:
+            self.trace_counts["build"] += 1
+            return fmm_build(z, q, cfg, **topo)
+
+        return build
+
+    def _make_evaluate(self, impls: dict):
+        cfg = self.cfg
+
+        def evaluate(plan: FmmPlan) -> jax.Array:
+            self.trace_counts["evaluate"] += 1
+            phi_sorted = fmm_evaluate(plan, cfg, **impls)
+            out = jnp.zeros_like(phi_sorted)
+            return out.at[plan.tree.perm].set(phi_sorted)
+
+        return evaluate
+
+    def _make_core(self, impls: dict, topo: dict):
         cfg = self.cfg
 
         def core(z: jax.Array, q: jax.Array) -> jax.Array:
-            plan = fmm_build(z, q, cfg)
+            plan = fmm_build(z, q, cfg, **topo)
             phi_sorted = fmm_evaluate(plan, cfg, **impls)
             out = jnp.zeros_like(phi_sorted)
             return out.at[plan.tree.perm].set(phi_sorted)
@@ -166,13 +205,39 @@ class FmmSolver:
                 f"{self.backend.name!r})", RuntimeWarning, stacklevel=2)
         return self._apply_batched(z, q)
 
+    def refresh(self, z: jax.Array, q: jax.Array) -> FmmPlan:
+        """Rebuild tree + connectivity for moved particles — the cheap
+        per-step topology update of a time-stepping workload.
+
+        Compiled once per solver (same static caps/tiling as ``apply``):
+        after the first call, refreshing perturbed positions costs one
+        device-resident sort+connect launch sequence — no re-trace, no
+        re-compile (``trace_counts["build"]`` pins this in tests).
+        Feed the plan to ``apply_plan``; check ``plan.conn.overflow``
+        (one scalar) to monitor cap drift as particles move.
+        """
+        if z.shape != (self.cfg.n,) or q.shape != (self.cfg.n,):
+            raise ValueError(
+                f"refresh wants z and q of shape ({self.cfg.n},); got "
+                f"z{z.shape} q{q.shape}")
+        return self._refresh(z, q)
+
+    def apply_plan(self, plan: FmmPlan) -> jax.Array:
+        """Evaluate on a prebuilt plan (from ``refresh``); input order.
+
+        ``refresh`` + ``apply_plan`` is ``apply`` split at the
+        topology/evaluation seam, so a time-stepper can rebuild the plan
+        every step, inspect it (overflow, stats) without extra builds,
+        or evaluate one plan several times."""
+        return self._apply_plan(plan)
+
     def plan(self, z: jax.Array, q: jax.Array) -> FmmPlan:
         """Topological phase only (tree + connectivity) for inspection."""
-        return fmm_build(z, q, self.cfg)
+        return self.refresh(z, q)   # shares refresh's shape validation
 
     def stats(self, z: jax.Array, q: jax.Array) -> dict:
         """Connectivity stats (incl. ``overflow``) for one problem."""
-        return connectivity_stats(jax.device_get(self.plan(z, q).conn))
+        return connectivity_stats(self.plan(z, q).conn)
 
     # -- autotuning ---------------------------------------------------------
 

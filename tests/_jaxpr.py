@@ -1,17 +1,27 @@
-"""Shared jaxpr-inspection helpers for the launch-count tests."""
+"""Shared jaxpr-inspection helpers for the launch/sort-count tests."""
 
 
-def count_pallas_calls(jaxpr) -> int:
-    """Recursively count pallas_call eqns in a jaxpr (incl. sub-jaxprs)."""
+def count_eqns(jaxpr, name: str) -> int:
+    """Recursively count eqns of one primitive in a jaxpr (incl. sub-jaxprs)."""
     from jax.core import Jaxpr, ClosedJaxpr
     n = 0
     for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pallas_call":
+        if eqn.primitive.name == name:
             n += 1
         for v in eqn.params.values():
             for sub in (v if isinstance(v, (list, tuple)) else [v]):
                 if isinstance(sub, ClosedJaxpr):
-                    n += count_pallas_calls(sub.jaxpr)
+                    n += count_eqns(sub.jaxpr, name)
                 elif isinstance(sub, Jaxpr):
-                    n += count_pallas_calls(sub)
+                    n += count_eqns(sub, name)
     return n
+
+
+def count_pallas_calls(jaxpr) -> int:
+    """Recursively count pallas_call eqns in a jaxpr (incl. sub-jaxprs)."""
+    return count_eqns(jaxpr, "pallas_call")
+
+
+def count_sorts(jaxpr) -> int:
+    """Recursively count sort eqns in a jaxpr (incl. sub-jaxprs)."""
+    return count_eqns(jaxpr, "sort")

@@ -1,8 +1,7 @@
 import os
 import sys
 
-# Tests run on the single real CPU device (the dry-run alone forces 512
-# virtual devices; see launch/dryrun.py). FMM oracle tests need f64.
+# Tests run on the single real CPU device. FMM oracle tests need f64.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax

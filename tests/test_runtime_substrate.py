@@ -1,4 +1,4 @@
-"""Optimizers, checkpointing, data pipeline, compression, straggler/failure
+"""Checkpointing, data pipeline, compression, straggler/failure
 handling — the distributed-runtime substrate."""
 import os
 import subprocess
@@ -6,7 +6,6 @@ import sys
 import tempfile
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 from _hypothesis_fallback import given, settings, st
@@ -15,57 +14,7 @@ from repro.checkpoint import (CheckpointManager, latest_step,
                               restore_checkpoint, save_checkpoint)
 from repro.data.synthetic import DataConfig, Prefetcher, lm_batch, particles
 from repro.launch.runtime import FailureInjector, StragglerMonitor, train_loop
-from repro.optim import (OptConfig, apply_updates, global_norm,
-                         init_opt_state, lr_schedule)
 from repro.parallel import dequantize_int8, quantize_int8
-
-
-# ---------------------------------------------------------------------------
-# optimizers
-# ---------------------------------------------------------------------------
-
-@pytest.mark.parametrize("name", ["adamw", "adafactor"])
-def test_optimizer_converges_quadratic(name):
-    oc = OptConfig(name=name, lr=0.1, warmup=1, total_steps=300,
-                   weight_decay=0.0, factored_min_dim=4)
-    params = {"w": jnp.full((16, 16), 3.0), "b": jnp.ones(16)}
-    st_ = init_opt_state(params, oc)
-    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
-    for i in range(200):
-        g = jax.grad(loss)(params)
-        params, st_, _ = apply_updates(params, g, st_, jnp.int32(i), oc)
-    assert float(loss(params)) < 1e-2
-
-
-def test_weight_decay_mask_excludes_1d():
-    oc = OptConfig(lr=0.1, warmup=1, weight_decay=1.0)
-    params = {"w": jnp.ones((4, 4)), "gain": jnp.ones(4)}
-    st_ = init_opt_state(params, oc)
-    zero_g = jax.tree.map(jnp.zeros_like, params)
-    p2, _, _ = apply_updates(params, zero_g, st_, jnp.int32(0), oc)
-    assert float(jnp.abs(p2["w"] - 1).max()) > 1e-4   # decayed
-    np.testing.assert_allclose(np.asarray(p2["gain"]), 1.0)  # masked
-
-
-def test_grad_clipping_and_schedule():
-    oc = OptConfig(lr=1.0, clip_norm=1.0, warmup=10, total_steps=100)
-    g = {"w": jnp.full((8,), 100.0)}
-    clipped_norm = float(global_norm(
-        jax.tree.map(lambda x: x / jnp.maximum(global_norm(g) / 1.0, 1), g)))
-    assert clipped_norm <= 1.0 + 1e-5
-    lrs = [float(lr_schedule(jnp.int32(s), oc)) for s in (0, 9, 50, 99)]
-    assert lrs[0] < lrs[1]          # warmup rises
-    assert lrs[1] > lrs[2] > lrs[3]  # cosine decays
-    assert lrs[3] >= oc.lr * oc.min_lr_ratio - 1e-6
-
-
-def test_adafactor_memory_is_sublinear():
-    oc = OptConfig(name="adafactor", factored_min_dim=128)
-    params = {"w": jnp.zeros((1024, 1024), jnp.bfloat16)}
-    st_ = init_opt_state(params, oc)
-    full = params["w"].size
-    fact = st_["vr"]["w"].size + st_["vc"]["w"].size
-    assert fact < full / 100
 
 
 # ---------------------------------------------------------------------------

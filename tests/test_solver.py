@@ -267,3 +267,64 @@ def test_solver_stats_reports_overflow_scalar():
                                                       jnp.asarray(q))
     assert stats["overflow"] == 0
     assert stats["p2p_pairs"] > 0
+
+
+# ---------------------------------------------------------------------------
+# plan refresh (time-stepping workloads)
+# ---------------------------------------------------------------------------
+
+def _perturbed(z, seed, eps=1e-4):
+    rng = np.random.default_rng(seed)
+    zd = np.asarray(z) + eps * (rng.normal(size=z.shape)
+                                + 1j * rng.normal(size=z.shape))
+    # clamp per component: complex np.clip compares lexicographically
+    return jnp.asarray(np.clip(zd.real, 0, 1) + 1j * np.clip(zd.imag, 0, 1))
+
+
+def test_refresh_plus_apply_plan_matches_apply():
+    z, q = particles("normal", CFG64.n, 7)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+    solver = FmmSolver.build(CFG64, "reference")
+    plan = solver.refresh(z, q)
+    np.testing.assert_allclose(np.asarray(solver.apply_plan(plan)),
+                               np.asarray(solver.apply(z, q)),
+                               rtol=1e-12, atol=1e-12)
+
+
+def test_refresh_does_not_retrace_on_perturbed_positions():
+    """The time-stepping contract: after the first step, refreshing moved
+    particles reuses the compiled build/evaluate programs (trace-count
+    asserted; a re-trace would pay compilation per step)."""
+    z, q = particles("uniform", CFG64.n, 8)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+    solver = FmmSolver(CFG64, "reference")   # fresh instance: clean counters
+    for step in range(3):
+        plan = solver.refresh(_perturbed(z, step), q)
+        phi = solver.apply_plan(plan)
+        assert phi.shape == (CFG64.n,)
+        assert int(plan.conn.overflow) == 0
+    assert solver.trace_counts == {"build": 1, "evaluate": 1}
+
+
+def test_refresh_validates_shape():
+    solver = FmmSolver.build(CFG64, "reference")
+    z, q = particles("uniform", CFG64.n, 9)
+    with pytest.raises(ValueError, match="refresh"):
+        solver.refresh(jnp.asarray(z)[: CFG64.n // 2],
+                       jnp.asarray(q)[: CFG64.n // 2])
+
+
+def test_refresh_overflow_scalar_monitors_cap_drift():
+    """plan.conn.overflow is the cheap per-step cap monitor: a config
+    whose caps are too small for the refreshed layout must flag it."""
+    z, q = particles("normal", 256, 10)
+    tight = dataclasses_replace_caps(CFG64, strong_cap=2)
+    solver = FmmSolver.build(tight, "reference")
+    plan = solver.refresh(jnp.asarray(z), jnp.asarray(q))
+    assert int(plan.conn.overflow) > 0
+
+
+def dataclasses_replace_caps(cfg, **kw):
+    import dataclasses
+    kw.setdefault("weak_cap", 0)
+    return dataclasses.replace(cfg, **kw)
