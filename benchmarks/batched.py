@@ -4,8 +4,18 @@ B independent FMM problems of one ``FmmConfig`` evaluated in a single
 ``FmmSolver.apply_batched`` call (one XLA program with a batch axis) vs a
 Python loop of single-problem ``apply`` calls. Because all adaptivity
 lives in the contents of statically-shaped padded lists, the batch
-dimension is free parallelism; this is the "millions of users" path the
-solver front-end exists for.
+dimension is free parallelism; on the pallas backend the custom batching
+rules additionally fold the batch into the batch-major kernel grids —
+one fused launch per phase for all B problems. This is the "millions of
+users" path the solver front-end exists for.
+
+Every row's ``derived`` field records ``dispatched=<backend>`` — what
+``solver.dispatched["apply_batched"]`` reports the batched entry point
+ACTUALLY ran — so timings cannot silently be attributed to the wrong
+backend. Off-TPU the pallas kernels run in interpret mode (noise, not
+kernel speed): timing a pallas-dispatched batched path there is refused
+unless ``allow_interpret=True`` opts in (mirroring ``fmm_phases``), and
+the opted-in rows carry an ``interpreted`` marker.
 """
 from __future__ import annotations
 
@@ -17,6 +27,7 @@ import jax.numpy as jnp
 
 from repro.configs.fmm2d import fmm_config
 from repro.data.synthetic import particles
+from repro.kernels.common import default_interpret
 from repro.solver import FmmSolver
 
 
@@ -30,7 +41,8 @@ def _best(fn, *args, repeats=3):
     return best
 
 
-def run(n: int = 4096, batch: int = 8, p: int = 8):
+def run(n: int = 4096, batch: int = 8, p: int = 8, backend: str = "auto",
+        allow_interpret: bool = False):
     cfg = fmm_config(n, p=p)
     zb = np.stack([np.asarray(particles("uniform", n, s)[0])
                    for s in range(batch)])
@@ -38,7 +50,18 @@ def run(n: int = 4096, batch: int = 8, p: int = 8):
                    for s in range(batch)])
     zb, qb = jnp.asarray(zb), jnp.asarray(qb)
 
-    solver = FmmSolver.build(cfg, "reference").tune(zb, qb)
+    solver = FmmSolver.build(cfg, backend).tune(zb, qb)
+    dispatched = solver.dispatched["apply_batched"]
+    interpreted = dispatched == "pallas" and default_interpret()
+    if interpreted and not allow_interpret:
+        raise RuntimeError(
+            "refusing to time apply_batched dispatched to 'pallas' in "
+            "interpret mode (off-TPU): interpreted timings measure the "
+            "Pallas interpreter, not the batch-major kernels. Run on a "
+            "TPU, use backend='reference', or pass allow_interpret=True "
+            "to get annotated noise.")
+    tag = f"dispatched={dispatched}" + (" interpreted" if interpreted
+                                        else "")
 
     def looped(z, q):
         return [solver.apply(z[i], q[i]) for i in range(batch)]
@@ -47,10 +70,13 @@ def run(n: int = 4096, batch: int = 8, p: int = 8):
     t_batched = _best(solver.apply_batched, zb, qb)
 
     rows = [
-        (f"batched/B={batch}_loop", t_loop * 1e6, "problems_per_call=1"),
+        (f"batched/B={batch}_loop", t_loop * 1e6,
+         f"problems_per_call=1 {tag}"),
         (f"batched/B={batch}_batched", t_batched * 1e6,
-         f"problems_per_call={batch} speedup={t_loop / t_batched:.2f}x"),
+         f"problems_per_call={batch} speedup={t_loop / t_batched:.2f}x "
+         f"{tag}"),
         (f"batched/B={batch}_caps", 0.0,
-         f"tuned strong={solver.cfg.strong_cap} weak={solver.cfg.weak_cap}"),
+         f"tuned strong={solver.cfg.strong_cap} weak={solver.cfg.weak_cap} "
+         f"{tag}"),
     ]
     return rows

@@ -3,8 +3,9 @@
     python scripts/bench_compare.py BENCH_baseline.json bench.json \
         [--threshold 0.25] [--min-us 200] [--relative] [--all]
 
-Fails (exit 1) when any *phase timing* row — ``table5_1/*`` and
-``fmm_phases/*`` — regresses by more than ``--threshold`` (default 25%)
+Fails (exit 1) when any *phase timing* row — ``table5_1/*``,
+``fmm_phases/*`` and the batched-serving ``batched/*`` entries —
+regresses by more than ``--threshold`` (default 25%)
 relative to the baseline. Rows below ``--min-us`` in the baseline are
 skipped (timer noise dominates there), as are rows present in only one
 record (phases legitimately appear/disappear when backends change —
@@ -30,9 +31,8 @@ from __future__ import annotations
 import argparse
 import json
 import statistics
-import sys
 
-PHASE_PREFIXES = ("table5_1/", "fmm_phases/")
+PHASE_PREFIXES = ("table5_1/", "fmm_phases/", "batched/")
 
 
 def _rows(record: dict) -> dict[str, float]:

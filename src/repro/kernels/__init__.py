@@ -10,6 +10,10 @@
 Each subpackage ships <name>.py (pl.pallas_call + explicit BlockSpec VMEM
 tiling), ops.py (jit'd wrapper with the FMM-pipeline contract) and ref.py
 (pure-jnp oracle). Validated with interpret=True on CPU; TPU is the target.
+Every kernel grid is *batch-major*: the per-problem ``*_pallas`` entry
+points carry custom batching rules that lower ``jax.vmap`` onto a
+(B, ...) grid — B problems per launch, one launch per phase — and the
+``*_pallas_batched`` twins take the batch-major operands directly.
 The topological phase's sort/scan/compaction primitives stay on XLA:TPU
 (DESIGN.md §2), but its leaf-level classification — 3/4 of all boxes —
 ships as a kernel:
@@ -24,21 +28,24 @@ dispatches each phase through it — swap implementations per phase by
 backend name, or register new ones with ``register_backend``.
 """
 from . import common
-from .eval import eval_fused_apply, eval_fused_pallas, m2p_ref, p2l_apply, \
-    p2l_pallas
-from .p2p import p2p_apply, p2p_pallas, p2p_ref
-from .m2l import m2l_fused_apply, m2l_level_apply, m2l_pallas, m2l_ref
-from .l2p import l2p_apply, l2p_pallas, l2p_ref
+from .eval import eval_fused_apply, eval_fused_pallas, \
+    eval_fused_pallas_batched, m2p_ref, p2l_apply, p2l_pallas, \
+    p2l_pallas_batched
+from .p2p import p2p_apply, p2p_pallas, p2p_pallas_batched, p2p_ref
+from .m2l import m2l_fused_apply, m2l_level_apply, m2l_pallas, \
+    m2l_pallas_batched, m2l_ref
+from .l2p import l2p_apply, l2p_pallas, l2p_pallas_batched, l2p_ref
 from .nbody import nbody_direct, nbody_pallas, nbody_ref
 from .topology import leaf_classify_pallas
 
 __all__ = [
     "common",
-    "eval_fused_apply", "eval_fused_pallas", "m2p_ref",
-    "p2l_apply", "p2l_pallas",
-    "p2p_apply", "p2p_pallas", "p2p_ref",
-    "m2l_fused_apply", "m2l_level_apply", "m2l_pallas", "m2l_ref",
-    "l2p_apply", "l2p_pallas", "l2p_ref",
+    "eval_fused_apply", "eval_fused_pallas", "eval_fused_pallas_batched",
+    "m2p_ref", "p2l_apply", "p2l_pallas", "p2l_pallas_batched",
+    "p2p_apply", "p2p_pallas", "p2p_pallas_batched", "p2p_ref",
+    "m2l_fused_apply", "m2l_level_apply", "m2l_pallas",
+    "m2l_pallas_batched", "m2l_ref",
+    "l2p_apply", "l2p_pallas", "l2p_pallas_batched", "l2p_ref",
     "nbody_direct", "nbody_pallas", "nbody_ref",
     "leaf_classify_pallas",
 ]

@@ -7,6 +7,17 @@ is an all-zero dummy row that -1 (masked) interaction-list entries are
 redirected to, so the kernels never branch on list validity — a zero-strength
 source contributes exactly zero. ``n_pad`` is the max leaf population rounded
 up to the 128-lane width.
+
+Every kernel grid is *batch-major* (DESIGN.md §2): operands carry a
+leading problem axis B, the grid is ``(B, ntile, steps)`` with
+``program_id(0)`` selecting the problem, and the interaction lists ride
+in SMEM as one (B, nbox, S) scalar-prefetch operand whose BlockSpec
+index maps take the batch coordinate first. B problems therefore
+lengthen the grid without touching the per-step VMEM working set —
+single-problem callers run the same kernels at B = 1, and
+``jax.vmap`` of the per-problem wrappers lowers onto the batched grid
+through their custom batching rules (see the ``*_op`` factories in each
+kernel module).
 """
 from __future__ import annotations
 
@@ -41,18 +52,66 @@ def pad_rows(a: jax.Array, nrows: int, value=0):
     return jnp.pad(a, widths, constant_values=value)
 
 
+def pad_boxes(a: jax.Array, nrows: int, value=0):
+    """Pad the box axis (axis -2) of a batch-major array up to ``nrows``."""
+    extra = nrows - a.shape[-2]
+    if extra == 0:
+        return a
+    widths = ((0, 0),) * (a.ndim - 2) + ((0, extra), (0, 0))
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def broadcast_unbatched(args, in_batched, axis_size: int):
+    """Broadcast the unbatched operands of a custom-vmap rule to the full
+    (B, ...) batch-major shape the kernels expect. Operands already
+    carrying the mapped axis (moved to front by ``jax.custom_batching``)
+    pass through untouched."""
+    return [a if b else jnp.broadcast_to(a[None], (axis_size,) + a.shape)
+            for a, b in zip(args, in_batched)]
+
+
+def make_batched_op(batched_call):
+    """Per-problem view of a batch-major kernel entry, with the custom
+    batching rule that makes it batch-native.
+
+    ``batched_call(*args)`` must take operands with a leading problem
+    axis B and return a tuple of (B, ...) outputs. The returned op takes
+    the same operands *without* the batch axis; calling it runs the
+    kernel at B = 1, and ``jax.vmap`` of it lowers onto the batch-major
+    grid directly — one launch for the whole batch — broadcasting any
+    unbatched operands first. Kernels whose operand list varies by
+    static config (m2l's log planes, the fused evaluation's m2p region)
+    wrap their own rule instead.
+    """
+    @jax.custom_batching.custom_vmap
+    def op(*args):
+        outs = batched_call(*(a[None] for a in args))
+        return tuple(o[0] for o in outs)
+
+    @op.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        outs = batched_call(*broadcast_unbatched(args, in_batched,
+                                                 axis_size))
+        return tuple(outs), tuple(True for _ in outs)
+
+    return op
+
+
 def prefetch_row_specs(TB: int, SW: int, width: int):
-    """One ``(1, width)`` scalar-prefetch-indexed BlockSpec per staged
-    source row: spec (w, tb) DMAs the row named by list entry
-    ``[i*TB + tb, s*SW + w]`` at grid step (i, s). The list itself is the
-    first scalar-prefetch operand (``lref``)."""
+    """One ``(None, 1, width)`` scalar-prefetch-indexed BlockSpec per
+    staged source row on the batch-major grid: spec (w, tb) DMAs the row
+    of problem ``b`` named by list entry ``[b, i*TB + tb, s*SW + w]`` at
+    grid step (b, i, s). The list itself is the first scalar-prefetch
+    operand (``lref``, shape (B, ntile*TB, S_pad)); the leading ``None``
+    block dim squeezes the batch axis so the kernel body sees the same
+    (1, width) rows as a single-problem launch."""
 
     def make_src_map(w, tb):
-        def src_map(i, s, lref):
-            return (lref[i * TB + tb, s * SW + w], 0)
+        def src_map(b, i, s, lref):
+            return (b, lref[b, i * TB + tb, s * SW + w], 0)
         return src_map
 
-    return [pl.BlockSpec((1, width), make_src_map(w, tb))
+    return [pl.BlockSpec((None, 1, width), make_src_map(w, tb))
             for w in range(SW) for tb in range(TB)]
 
 
@@ -60,45 +119,48 @@ def staged_list_specs(lists: jax.Array, dummy: int, TB: int, SW: int,
                       width: int):
     """Tiled scalar-prefetch staging shared by the P2P and M2L kernels.
 
-    Pads the (nbox, S) interaction list for a ``(ntile, S_pad // SW)``
-    grid of ``TB``-target-box tiles — masked (-1) and padding entries
-    redirected to the all-zero ``dummy`` row — and builds one
-    ``(1, width)`` scalar-prefetch-indexed BlockSpec per staged source
-    row (see ``prefetch_row_specs``).
+    Pads the (B, nbox, S) interaction lists for a ``(B, ntile,
+    S_pad // SW)`` batch-major grid of ``TB``-target-box tiles — masked
+    (-1) and padding entries redirected to the all-zero ``dummy`` row —
+    and builds one ``(None, 1, width)`` scalar-prefetch-indexed
+    BlockSpec per staged source row (see ``prefetch_row_specs``).
 
     Returns ``(padded_lists, src_specs, ntile)``.
     """
-    nbox, S = lists.shape
+    _, nbox, S = lists.shape
     ntile = -(-nbox // TB)
     S_pad = round_up(S, SW)
     lists = jnp.where(lists >= 0, lists, dummy)
-    lists = pad_rows(lists, ntile * TB, dummy)
-    lists = jnp.pad(lists, ((0, 0), (0, S_pad - S)), constant_values=dummy)
+    lists = jnp.pad(lists, ((0, 0), (0, ntile * TB - nbox), (0, S_pad - S)),
+                    constant_values=dummy)
     return lists, prefetch_row_specs(TB, SW, width), ntile
 
 
 def staged_multilist(lists_seq, dummy: int, TB: int, SW: int):
     """Concatenate several interaction lists along the slot axis for one
-    fused grid: each (nbox, S_k) region is dummy-redirected and padded to
-    a multiple of ``SW`` so it owns a whole number of grid steps; the
-    combined list is row-padded for the TB-tile grid.
+    fused batch-major grid: each (B, nbox, S_k) region is
+    dummy-redirected and padded to a multiple of ``SW`` so it owns a
+    whole number of grid steps; the combined list is box-padded for the
+    TB-tile grid.
 
     Returns ``(combined, ntile, region_steps)`` where ``region_steps[k]``
     is the number of SW-wide grid steps of region k — the kernel branches
-    on ``pl.program_id(1)`` against the running step offsets to know
-    which interaction type a step carries.
+    on the step axis ``pl.program_id(2)`` against the running step
+    offsets to know which interaction type a step carries.
     """
-    nbox = lists_seq[0].shape[0]
+    nbox = lists_seq[0].shape[-2]
     ntile = -(-nbox // TB)
     regions, steps = [], []
     for lists in lists_seq:
-        S = lists.shape[1]
+        S = lists.shape[-1]
         S_pad = round_up(S, SW)
         l = jnp.where(lists >= 0, lists, dummy)
-        l = jnp.pad(l, ((0, 0), (0, S_pad - S)), constant_values=dummy)
+        l = jnp.pad(l, ((0, 0), (0, 0), (0, S_pad - S)),
+                    constant_values=dummy)
         regions.append(l)
         steps.append(S_pad // SW)
-    combined = pad_rows(jnp.concatenate(regions, axis=1), ntile * TB, dummy)
+    combined = pad_boxes(jnp.concatenate(regions, axis=-1), ntile * TB,
+                         dummy)
     return combined, ntile, steps
 
 

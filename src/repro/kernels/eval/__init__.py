@@ -1,7 +1,7 @@
-from .fused import eval_fused_pallas
-from .p2l import p2l_pallas
+from .fused import eval_fused_pallas, eval_fused_pallas_batched
+from .p2l import p2l_pallas, p2l_pallas_batched
 from .ops import eval_fused_apply, p2l_apply
 from .ref import m2p_ref
 
-__all__ = ["eval_fused_pallas", "p2l_pallas", "eval_fused_apply",
-           "p2l_apply", "m2p_ref"]
+__all__ = ["eval_fused_pallas", "eval_fused_pallas_batched", "p2l_pallas",
+           "p2l_pallas_batched", "eval_fused_apply", "p2l_apply", "m2p_ref"]

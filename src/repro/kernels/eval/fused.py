@@ -7,9 +7,11 @@ P2P scatter-add. Cruz, Layton & Barba (arXiv:1009.3457) show the win for
 FMM GPU kernels is keeping the *target tile resident* while every
 interaction type accumulates into it; this kernel is that idea on TPU.
 
-One grid step owns a tile of ``tile_boxes`` leaf boxes. The (TB, n_pad)
-``phi`` output block stays resident in VMEM across the entire fused
-interaction list and is written to HBM exactly once:
+One grid step owns a tile of ``tile_boxes`` leaf boxes of one problem:
+the grid is batch-major — (B, ntile, steps), ``program_id(0)`` selects
+the problem — and the (TB, n_pad) ``phi`` output block stays resident in
+VMEM across the entire fused interaction list and is written to HBM
+exactly once:
 
   s == 0                 seed with the L2P Horner over the (TB, P) local
                          coefficient block (pre-centered particle planes);
@@ -24,7 +26,11 @@ the p2p region's columns select particle rows, the m2p region's columns
 select multipole rows. Every staged spec family DMAs on every step — in
 the foreign region it fetches a (harmless, valid) row that the
 ``pl.when`` branch never reads — which keeps the grid rectangular and
-lets Pallas double-buffer all streams uniformly.
+lets Pallas double-buffer all streams uniformly. B problems only
+lengthen the batch-major grid axis — the per-step VMEM working set is
+batch-invariant (``autotune.eval_fused_vmem_bytes`` stays valid), and
+``jax.vmap`` of ``eval_fused_pallas`` lowers onto this grid through the
+op's custom batching rule, so batched serving runs at kernel speed.
 
 Self-interaction in the P2P branch is excluded by global particle rank
 (trk/srk planes), not position, so duplicated positions keep their
@@ -40,9 +46,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..common import (compiler_params, l2p_horner, pad_rows, pairwise_tile,
-                      prefetch_row_specs, resolve_interpret,
-                      staged_multilist)
+from ..common import (broadcast_unbatched, compiler_params, l2p_horner,
+                      pad_boxes, pairwise_tile, prefetch_row_specs,
+                      resolve_interpret, staged_multilist)
 
 
 def _make_kernel(p: int, P: int, kernel: str, TB: int, SW: int,
@@ -60,7 +66,7 @@ def _make_kernel(p: int, P: int, kernel: str, TB: int, SW: int,
             outr, outi = rest[7 * n + 3], rest[7 * n + 4]
         else:
             outr, outi = rest[5 * n], rest[5 * n + 1]
-        s = pl.program_id(1)
+        s = pl.program_id(2)
 
         def tile(refs, o):
             return jnp.concatenate([r[...] for r in refs[o:o + TB]], axis=0)
@@ -135,12 +141,15 @@ def _eval_fused_pallas(p2p_lists, m2p_lists, tzr, tzi, trk, tr, ti, br, bi,
                        szr, szi, sqr, sqi, srk, ar, ai, mcr, mci, mrho, *,
                        p: int, kernel: str, tile_boxes: int,
                        stage_width: int, interpret: bool):
-    nbox = p2p_lists.shape[0]
-    n_pad = tzr.shape[1]
+    """Batch-major core: lists (B, nbox, S), planes (B, nbox[+1], ...).
+    ``m2p_lists=None`` (with None multipole/slot planes) drops the M2P
+    region entirely."""
+    B, nbox, _ = p2p_lists.shape
+    n_pad = tzr.shape[-1]
     TB, SW = tile_boxes, stage_width
-    dummy = szr.shape[0] - 1                 # all-zero row in every plane
+    dummy = szr.shape[-2] - 1                # all-zero row in every plane
     with_m2p = m2p_lists is not None
-    P = br.shape[1]
+    P = br.shape[-1]
 
     regions = [p2p_lists] + ([m2p_lists] if with_m2p else [])
     lists, ntile, steps = staged_multilist(regions, dummy, TB, SW)
@@ -148,20 +157,20 @@ def _eval_fused_pallas(p2p_lists, m2p_lists, tzr, tzi, trk, tr, ti, br, bi,
     m2p_steps = steps[1] if with_m2p else 0
 
     def tgt(a, fill=0):
-        return pad_rows(a, ntile * TB, fill)
+        return pad_boxes(a, ntile * TB, fill)
 
     tzr, tzi, tr, ti = tgt(tzr), tgt(tzi), tgt(tr), tgt(ti)
     br, bi, trk = tgt(br), tgt(bi), tgt(trk, -1)
 
-    def tgt_map(i, s, lref):
-        return (i, 0)
+    def tgt_map(b, i, s, lref):
+        return (b, i, 0)
 
-    def slot_map(i, s, lref):
-        return (i, s)
+    def slot_map(b, i, s, lref):
+        return (b, i, s)
 
     part_specs = prefetch_row_specs(TB, SW, n_pad)   # particle/rank rows
-    in_specs = ([pl.BlockSpec((TB, n_pad), tgt_map)] * 5
-                + [pl.BlockSpec((TB, P), tgt_map)] * 2
+    in_specs = ([pl.BlockSpec((None, TB, n_pad), tgt_map)] * 5
+                + [pl.BlockSpec((None, TB, P), tgt_map)] * 2
                 + part_specs * 5)
     n = TB * SW
     operands = [lists, tzr, tzi, trk, tr, ti, br, bi,
@@ -170,36 +179,74 @@ def _eval_fused_pallas(p2p_lists, m2p_lists, tzr, tzi, trk, tr, ti, br, bi,
     if with_m2p:
         # slot planes span the whole fused list (zeros in the p2p region)
         total_cols = (p2p_steps + m2p_steps) * SW
+
         def slot_plane(a):
-            a = jnp.pad(a, ((0, 0), (p2p_steps * SW,
-                                     total_cols - p2p_steps * SW
-                                     - a.shape[1])))
+            a = jnp.pad(a, ((0, 0), (0, 0),
+                            (p2p_steps * SW,
+                             total_cols - p2p_steps * SW - a.shape[-1])))
             return tgt(a)
+
         mult_specs = prefetch_row_specs(TB, SW, P)   # multipole rows
-        in_specs += mult_specs * 2 + [pl.BlockSpec((TB, SW), slot_map)] * 3
+        in_specs += (mult_specs * 2
+                     + [pl.BlockSpec((None, TB, SW), slot_map)] * 3)
         operands += [*([ar] * n), *([ai] * n),
                      slot_plane(mcr), slot_plane(mci), slot_plane(mrho)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(ntile, p2p_steps + m2p_steps),
+        grid=(B, ntile, p2p_steps + m2p_steps),
         in_specs=in_specs,
         out_specs=[
-            pl.BlockSpec((TB, n_pad), tgt_map),
-            pl.BlockSpec((TB, n_pad), tgt_map),
+            pl.BlockSpec((None, TB, n_pad), tgt_map),
+            pl.BlockSpec((None, TB, n_pad), tgt_map),
         ],
     )
     dt = tzr.dtype
     outr, outi = pl.pallas_call(
         _make_kernel(p, P, kernel, TB, SW, p2p_steps, m2p_steps),
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((ntile * TB, n_pad), dt)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((B, ntile * TB, n_pad), dt)] * 2,
         compiler_params=compiler_params(
-            dimension_semantics=("parallel", "arbitrary"),
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(*operands)
-    return outr[:nbox], outi[:nbox]
+    return outr[:, :nbox], outi[:, :nbox]
+
+
+@functools.lru_cache(maxsize=None)
+def _eval_fused_op(p: int, kernel: str, tile_boxes: int, stage_width: int,
+                   with_m2p: bool, interpret: bool):
+    """Per-problem fused-evaluation op; its custom batching rule lowers
+    ``jax.vmap`` onto the batch-major grid, so the evaluation phase of B
+    problems is still exactly ONE launch. The ``with_m2p=False`` variant
+    has no multipole/slot operands at all."""
+    kw = dict(p=p, kernel=kernel, tile_boxes=tile_boxes,
+              stage_width=stage_width, interpret=interpret)
+
+    def call(args):
+        if with_m2p:
+            (p2p_lists, m2p_lists, tzr, tzi, trk, tr, ti, br, bi,
+             szr, szi, sqr, sqi, srk, ar, ai, mcr, mci, mrho) = args
+        else:
+            (p2p_lists, tzr, tzi, trk, tr, ti, br, bi,
+             szr, szi, sqr, sqi, srk) = args
+            m2p_lists = ar = ai = mcr = mci = mrho = None
+        return _eval_fused_pallas(p2p_lists, m2p_lists, tzr, tzi, trk, tr,
+                                  ti, br, bi, szr, szi, sqr, sqi, srk,
+                                  ar, ai, mcr, mci, mrho, **kw)
+
+    @jax.custom_batching.custom_vmap
+    def op(*args):
+        outr, outi = call([a[None] for a in args])
+        return outr[0], outi[0]
+
+    @op.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        return (call(broadcast_unbatched(args, in_batched, axis_size)),
+                (True, True))
+
+    return op
 
 
 def eval_fused_pallas(p2p_lists, m2p_lists, tzr, tzi, trk, tr, ti, br, bi,
@@ -219,14 +266,34 @@ def eval_fused_pallas(p2p_lists, m2p_lists, tzr, tzi, trk, tr, ti, br, bi,
     (nbox, S_m2p) per-slot source-center/radius planes (masked slots 0).
 
     Returns (outr, outi): (nbox, n_pad) — the full evaluation-phase
-    potential at the dense leaf slots, written to HBM once.
+    potential at the dense leaf slots, written to HBM once. Batch-native:
+    under ``jax.vmap``, B problems compile to ONE batch-major launch
+    (see ``eval_fused_pallas_batched``).
     """
+    with_m2p = m2p_lists is not None
+    if with_m2p and (ar is None or mcr is None):
+        raise ValueError("m2p region needs multipole and slot planes")
+    op = _eval_fused_op(p, kernel, tile_boxes, stage_width, with_m2p,
+                        resolve_interpret(interpret))
+    args = (p2p_lists,)
+    if with_m2p:
+        args += (m2p_lists,)
+    args += (tzr, tzi, trk, tr, ti, br, bi, szr, szi, sqr, sqi, srk)
+    if with_m2p:
+        args += (ar, ai, mcr, mci, mrho)
+    return op(*args)
+
+
+def eval_fused_pallas_batched(p2p_lists, m2p_lists, tzr, tzi, trk, tr, ti,
+                              br, bi, szr, szi, sqr, sqi, srk, ar=None,
+                              ai=None, mcr=None, mci=None, mrho=None, *,
+                              p: int, kernel: str = "harmonic",
+                              tile_boxes: int = 8, stage_width: int = 1,
+                              interpret: bool | None = None):
+    """Batch-major entry: all operands carry a leading problem axis B;
+    one (B, ntile, steps) launch returns (B, nbox, n_pad) planes."""
     if m2p_lists is not None and (ar is None or mcr is None):
         raise ValueError("m2p region needs multipole and slot planes")
-    if m2p_lists is None:
-        z2 = jnp.zeros((1, br.shape[1]), tzr.dtype)
-        ar = ai = z2
-        mcr = mci = mrho = jnp.zeros((1, 1), tzr.dtype)
     return _eval_fused_pallas(
         p2p_lists, m2p_lists, tzr, tzi, trk, tr, ti, br, bi,
         szr, szi, sqr, sqi, srk, ar, ai, mcr, mci, mrho,

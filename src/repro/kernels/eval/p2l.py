@@ -17,6 +17,9 @@ lane-reduces each into its (TB, 1) output column. P2L lives in the
 *downward* launch (not the evaluation megakernel) because its output is
 local coefficients consumed by L2L/L2P — fusing it into evaluation would
 re-introduce the HBM round-trip it exists to avoid (see DESIGN.md §2).
+The grid is batch-major — (B, ntile, steps), ``program_id(0)`` selecting
+the problem — so ``jax.vmap`` of ``p2l_pallas`` folds B problems into
+one launch via the op's custom batching rule.
 
 Both G-kernels: "harmonic" b~_l = rho^l sum q/(x-z0)^(l+1) and "log"
 (b~_0 = sum q log(z0-x), b~_l = -rho^l sum q/(l (x-z0)^l)).
@@ -30,8 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..common import (compiler_params, pad_rows, resolve_interpret,
-                      staged_list_specs)
+from ..common import (compiler_params, make_batched_op, pad_boxes,
+                      resolve_interpret, staged_list_specs)
 
 
 def _make_kernel(p: int, P: int, kernel: str, TB: int, SW: int):
@@ -41,7 +44,7 @@ def _make_kernel(p: int, P: int, kernel: str, TB: int, SW: int):
         xzr_refs, xzi_refs = rest[:n], rest[n:2 * n]
         xqr_refs, xqi_refs = rest[2 * n:3 * n], rest[3 * n:4 * n]
         outr, outi = rest[4 * n], rest[4 * n + 1]
-        s = pl.program_id(1)
+        s = pl.program_id(2)
 
         @pl.when(s == 0)
         def _init():
@@ -117,28 +120,30 @@ def _make_kernel(p: int, P: int, kernel: str, TB: int, SW: int):
 def _p2l_pallas(lists, z0r, z0i, rho, xzr, xzi, xqr, xqi, *, p: int, P: int,
                 kernel: str, tile_boxes: int, stage_width: int,
                 interpret: bool):
-    nbox = lists.shape[0]
-    n_pad = xzr.shape[1]
+    """Batch-major core: lists (B, nbox, S), z0r/z0i/rho (B, nbox),
+    particle planes (B, nbox+1, n_pad)."""
+    B, nbox, _ = lists.shape
+    n_pad = xzr.shape[-1]
     TB, SW = tile_boxes, stage_width
-    dummy = xzr.shape[0] - 1
+    dummy = xzr.shape[-2] - 1
 
     lists, src_specs, ntile = staged_list_specs(lists, dummy, TB, SW, n_pad)
 
     def col(a):
-        return pad_rows(a.reshape(-1, 1), ntile * TB)
+        return pad_boxes(a.reshape(B, -1, 1), ntile * TB)
 
     z0r, z0i, rho = col(z0r), col(z0i), col(rho)
 
-    def tgt_map(i, s, lref):
-        return (i, 0)
+    def tgt_map(b, i, s, lref):
+        return (b, i, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(ntile, lists.shape[1] // SW),
-        in_specs=[pl.BlockSpec((TB, 1), tgt_map)] * 3 + src_specs * 4,
+        grid=(B, ntile, lists.shape[-1] // SW),
+        in_specs=[pl.BlockSpec((None, TB, 1), tgt_map)] * 3 + src_specs * 4,
         out_specs=[
-            pl.BlockSpec((TB, P), tgt_map),
-            pl.BlockSpec((TB, P), tgt_map),
+            pl.BlockSpec((None, TB, P), tgt_map),
+            pl.BlockSpec((None, TB, P), tgt_map),
         ],
     )
     dt = xzr.dtype
@@ -146,14 +151,24 @@ def _p2l_pallas(lists, z0r, z0i, rho, xzr, xzi, xqr, xqi, *, p: int, P: int,
     outr, outi = pl.pallas_call(
         _make_kernel(p, P, kernel, TB, SW),
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((ntile * TB, P), dt)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((B, ntile * TB, P), dt)] * 2,
         compiler_params=compiler_params(
-            dimension_semantics=("parallel", "arbitrary"),
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(lists, z0r, z0i, rho, *([xzr] * n), *([xzi] * n), *([xqr] * n),
       *([xqi] * n))
-    return outr[:nbox], outi[:nbox]
+    return outr[:, :nbox], outi[:, :nbox]
+
+
+@functools.lru_cache(maxsize=None)
+def _p2l_op(p: int, P: int, kernel: str, tile_boxes: int, stage_width: int,
+            interpret: bool):
+    """Per-problem P2L op; its custom batching rule lowers ``jax.vmap``
+    onto the batch-major kernel grid (one launch for B problems)."""
+    return make_batched_op(functools.partial(
+        _p2l_pallas, p=p, P=P, kernel=kernel, tile_boxes=tile_boxes,
+        stage_width=stage_width, interpret=interpret))
 
 
 def p2l_pallas(lists, z0r, z0i, rho, xzr, xzi, xqr, xqi, *, p: int, P: int,
@@ -163,8 +178,19 @@ def p2l_pallas(lists, z0r, z0i, rho, xzr, xzi, xqr, xqi, *, p: int, P: int,
     target-box center/radius; xzr/xzi/xqr/xqi: (nbox+1, n_pad) dense
     particle planes (dummy row zero). Returns (outr, outi): (nbox, P)
     radius-normalized local-coefficient contributions.
-    ``interpret=None`` auto-selects from the JAX platform.
+    ``interpret=None`` auto-selects from the JAX platform. Batch-native:
+    under ``jax.vmap``, B problems compile to ONE batch-major launch.
     """
+    op = _p2l_op(p, P, kernel, tile_boxes, stage_width,
+                 resolve_interpret(interpret))
+    return op(lists, z0r, z0i, rho, xzr, xzi, xqr, xqi)
+
+
+def p2l_pallas_batched(lists, z0r, z0i, rho, xzr, xzi, xqr, xqi, *, p: int,
+                       P: int, kernel: str = "harmonic", tile_boxes: int = 8,
+                       stage_width: int = 1, interpret: bool | None = None):
+    """Batch-major entry: all operands carry a leading problem axis B;
+    one (B, ntile, steps) launch returns (B, nbox, P) planes."""
     return _p2l_pallas(lists, z0r, z0i, rho, xzr, xzi, xqr, xqi, p=p, P=P,
                        kernel=kernel, tile_boxes=tile_boxes,
                        stage_width=stage_width,

@@ -1,5 +1,5 @@
-from .l2p import l2p_pallas
+from .l2p import l2p_pallas, l2p_pallas_batched
 from .ops import l2p_apply
 from .ref import l2p_ref
 
-__all__ = ["l2p_pallas", "l2p_apply", "l2p_ref"]
+__all__ = ["l2p_pallas", "l2p_pallas_batched", "l2p_apply", "l2p_ref"]

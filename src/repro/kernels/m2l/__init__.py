@@ -1,6 +1,6 @@
-from .m2l import m2l_pallas
+from .m2l import m2l_pallas, m2l_pallas_batched
 from .ops import fused_levels, m2l_fused_apply, m2l_level_apply
 from .ref import m2l_ref
 
-__all__ = ["m2l_pallas", "m2l_level_apply", "m2l_fused_apply",
-           "fused_levels", "m2l_ref"]
+__all__ = ["m2l_pallas", "m2l_pallas_batched", "m2l_level_apply",
+           "m2l_fused_apply", "fused_levels", "m2l_ref"]

@@ -20,7 +20,11 @@ the atomics the paper had to design around.
 
 The box axis is *level-agnostic*: callers may flatten all levels of the
 downward pass into one (sum 4^l, W) call with statically offset lists
-(see ops.m2l_fused_apply), collapsing L launches into one.
+(see ops.m2l_fused_apply), collapsing L launches into one. The grid is
+additionally *batch-major* — (B, ntile, steps) with ``program_id(0)``
+selecting the problem — so ``jax.vmap`` of ``m2l_pallas`` folds B
+problems into the same single launch (custom batching rule; the Hankel
+matrix stays one shared (P, P) constant across the batch).
 
 Both G-kernels: "harmonic" (a_0 = 0, as in all of the paper's
 experiments) and "log" (a_0 carries the source strength; the extra
@@ -35,8 +39,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..common import (compiler_params, pad_rows, resolve_interpret,
-                      round_up, staged_list_specs)
+from ..common import (broadcast_unbatched, compiler_params, pad_boxes,
+                      resolve_interpret, round_up, staged_list_specs)
 
 
 def _make_kernel(p: int, P: int, kernel: str, TB: int, SW: int):
@@ -51,7 +55,7 @@ def _make_kernel(p: int, P: int, kernel: str, TB: int, SW: int):
         else:
             ht_ref = rest[2 * n + 4]
             outr, outi = rest[2 * n + 5], rest[2 * n + 6]
-        s = pl.program_id(1)
+        s = pl.program_id(2)
 
         @pl.when(s == 0)
         def _init():
@@ -102,40 +106,42 @@ def _make_kernel(p: int, P: int, kernel: str, TB: int, SW: int):
 def _m2l_pallas(weak: jax.Array, ar, ai, prer, prei, postr, posti, logr,
                 logi, ht, *, p: int, kernel: str, tile_boxes: int,
                 stage_width: int, interpret: bool):
-    nbox, W = weak.shape
-    P = ar.shape[1]
+    """Batch-major core: weak (B, nbox, W), coefficient planes
+    (B, nbox+1, P), ratio planes (B, nbox, W); ht one shared (P, P)."""
+    B, nbox, W = weak.shape
+    P = ar.shape[-1]
     TB, SW = tile_boxes, stage_width
     W_pad = round_up(W, SW)
-    dummy = ar.shape[0] - 1
+    dummy = ar.shape[-2] - 1
 
     weak, src_specs, ntile = staged_list_specs(weak, dummy, TB, SW, P)
 
     def plane(a):
-        a = pad_rows(a, ntile * TB)
-        return jnp.pad(a, ((0, 0), (0, W_pad - W)))
+        a = pad_boxes(a, ntile * TB)
+        return jnp.pad(a, ((0, 0), (0, 0), (0, W_pad - W)))
 
     planes = [plane(a) for a in (prer, prei, postr, posti)]
     if kernel == "log":
         planes += [plane(logr), plane(logi)]
 
-    def tgt_map(i, s, wref):
-        return (i, 0)
+    def tgt_map(b, i, s, wref):
+        return (b, i, 0)
 
-    def slot_map(i, s, wref):
-        return (i, s)
+    def slot_map(b, i, s, wref):
+        return (b, i, s)
 
-    def const_map(i, s, wref):
+    def const_map(b, i, s, wref):
         return (0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(ntile, W_pad // SW),
+        grid=(B, ntile, W_pad // SW),
         in_specs=(src_specs * 2
-                  + [pl.BlockSpec((TB, SW), slot_map)] * len(planes)
+                  + [pl.BlockSpec((None, TB, SW), slot_map)] * len(planes)
                   + [pl.BlockSpec((P, P), const_map)]),
         out_specs=[
-            pl.BlockSpec((TB, P), tgt_map),
-            pl.BlockSpec((TB, P), tgt_map),
+            pl.BlockSpec((None, TB, P), tgt_map),
+            pl.BlockSpec((None, TB, P), tgt_map),
         ],
     )
     dt = ar.dtype
@@ -143,13 +149,69 @@ def _m2l_pallas(weak: jax.Array, ar, ai, prer, prei, postr, posti, logr,
     outr, outi = pl.pallas_call(
         _make_kernel(p, P, kernel, TB, SW),
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((ntile * TB, P), dt)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((B, ntile * TB, P), dt)] * 2,
         compiler_params=compiler_params(
-            dimension_semantics=("parallel", "arbitrary"),
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(weak, *([ar] * n), *([ai] * n), *planes, ht)
-    return outr[:nbox], outi[:nbox]
+    return outr[:, :nbox], outi[:, :nbox]
+
+
+@functools.lru_cache(maxsize=None)
+def _m2l_op(p: int, kernel: str, tile_boxes: int, stage_width: int,
+            interpret: bool):
+    """Per-problem M2L op; its custom batching rule lowers ``jax.vmap``
+    onto the batch-major grid. The log variant carries two extra log(r)
+    plane operands; the Hankel matrix ``ht`` is a shared constant and is
+    never broadcast along the batch."""
+    kw = dict(p=p, kernel=kernel, tile_boxes=tile_boxes,
+              stage_width=stage_width, interpret=interpret)
+    with_log = kernel == "log"
+
+    def call(weak, ar, ai, prer, prei, postr, posti, logr, logi, ht):
+        return _m2l_pallas(weak, ar, ai, prer, prei, postr, posti, logr,
+                           logi, ht, **kw)
+
+    def split(args):
+        # ht is always last; the log planes precede it on the log kernel
+        if with_log:
+            return args[:-3], args[-3:-1], args[-1]
+        return args[:-1], (None, None), args[-1]
+
+    def placeholder(ar):
+        return jnp.zeros((), ar.dtype)
+
+    @jax.custom_batching.custom_vmap
+    def op(*args):
+        batched, (logr, logi), ht = split(args)
+        batched = [a[None] for a in batched]
+        logs = ([logr[None], logi[None]] if with_log
+                else [placeholder(args[1])] * 2)
+        outr, outi = call(*batched, *logs, ht)
+        return outr[0], outi[0]
+
+    @op.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        batched, logs, ht = split(args)
+        bflags, lflags, htflag = split(in_batched)
+        batched = broadcast_unbatched(batched, bflags, axis_size)
+        if with_log:
+            logs = broadcast_unbatched(logs, lflags, axis_size)
+        else:
+            logs = [placeholder(args[1])] * 2
+        if htflag:
+            # ht is the constant binomial matrix, shared across the
+            # batch by construction — a per-problem ht cannot be
+            # honored on the shared (P, P) kernel operand, so refuse
+            # loudly rather than silently use one problem's matrix.
+            raise ValueError(
+                "m2l_pallas: the Hankel matrix ht must not carry the "
+                "vmapped axis (it is one shared (P, P) constant); pass "
+                "it unbatched")
+        return call(*batched, *logs, ht), (True, True)
+
+    return op
 
 
 def m2l_pallas(weak: jax.Array, ar, ai, prer, prei, postr, posti, ht, *,
@@ -163,8 +225,25 @@ def m2l_pallas(weak: jax.Array, ar, ai, prer, prei, postr, posti, ht, *,
     ht: (P, P) transposed Hankel matrix; logr/logi: (nbox, W) log(r)
     planes (log kernel only). Returns (outr, outi) of shape (nbox, P) —
     the summed normalized local contributions per target box.
-    ``interpret=None`` auto-selects from the JAX platform.
+    ``interpret=None`` auto-selects from the JAX platform. Batch-native:
+    under ``jax.vmap``, B problems compile to ONE batch-major launch.
     """
+    if kernel == "log" and (logr is None or logi is None):
+        raise ValueError("log kernel needs logr/logi planes")
+    op = _m2l_op(p, kernel, tile_boxes, stage_width,
+                 resolve_interpret(interpret))
+    args = (weak, ar, ai, prer, prei, postr, posti)
+    if kernel == "log":
+        args += (logr, logi)
+    return op(*args, ht)
+
+
+def m2l_pallas_batched(weak: jax.Array, ar, ai, prer, prei, postr, posti,
+                       ht, *, p: int, kernel: str = "harmonic", logr=None,
+                       logi=None, tile_boxes: int = 8, stage_width: int = 1,
+                       interpret: bool | None = None):
+    """Batch-major entry: operands carry a leading problem axis B (``ht``
+    stays one shared (P, P) constant); one (B, ntile, steps) launch."""
     if kernel == "log" and (logr is None or logi is None):
         raise ValueError("log kernel needs logr/logi planes")
     if logr is None:

@@ -1,5 +1,5 @@
 from .ops import p2p_apply
-from .p2p import p2p_pallas
+from .p2p import p2p_pallas, p2p_pallas_batched
 from .ref import p2p_ref
 
-__all__ = ["p2p_apply", "p2p_pallas", "p2p_ref"]
+__all__ = ["p2p_apply", "p2p_pallas", "p2p_pallas_batched", "p2p_ref"]

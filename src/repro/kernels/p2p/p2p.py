@@ -14,8 +14,11 @@ tree is what makes this possible). Pallas double-buffers the streaming
 source tiles, overlapping the next DMA with the (TB, n_pad, n_pad)
 pairwise tile evaluated in VREGs.
 
-Grid: (ceil(nbox/TB), ceil(S/SW)); output revisited across the list axis
--> accumulate in place (dimension_semantics: "arbitrary" on it).
+Grid: batch-major (B, ceil(nbox/TB), ceil(S/SW)); ``program_id(0)``
+selects the problem, the output is revisited across the list axis ->
+accumulate in place ("arbitrary" on it). B problems lengthen the grid
+without touching the per-step VMEM working set; ``jax.vmap`` of
+``p2p_pallas`` lowers onto this grid via the op's custom batching rule.
 
 Both G-kernels: "harmonic" q/(x - z) and "log" q*log(z - x).
 """
@@ -28,8 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ..common import (compiler_params, pad_rows, pairwise_tile,
-                      resolve_interpret, staged_list_specs)
+from ..common import (compiler_params, make_batched_op, pad_boxes,
+                      pairwise_tile, resolve_interpret, staged_list_specs)
 
 
 def _make_kernel(kernel: str, TB: int, SW: int):
@@ -39,7 +42,7 @@ def _make_kernel(kernel: str, TB: int, SW: int):
         sqr_refs, sqi_refs = rest[2 * n:3 * n], rest[3 * n:4 * n]
         srk_refs = rest[4 * n:5 * n]
         outr, outi = rest[5 * n], rest[5 * n + 1]
-        s = pl.program_id(1)
+        s = pl.program_id(2)
 
         @pl.when(s == 0)
         def _init():
@@ -71,28 +74,29 @@ def _make_kernel(kernel: str, TB: int, SW: int):
 def _p2p_pallas(lists: jax.Array, tzr, tzi, trk, szr, szi, sqr, sqi, srk, *,
                 kernel: str, tile_boxes: int, stage_width: int,
                 interpret: bool):
-    nbox = lists.shape[0]
-    n_pad = tzr.shape[1]
+    """Batch-major core: lists (B, nbox, S), planes (B, nbox[+1], n_pad)."""
+    B, nbox, _ = lists.shape
+    n_pad = tzr.shape[-1]
     TB, SW = tile_boxes, stage_width
-    dummy = szr.shape[0] - 1  # index of the all-zero row
+    dummy = szr.shape[-2] - 1  # index of the all-zero row
 
     lists, src_specs, ntile = staged_list_specs(lists, dummy, TB, SW, n_pad)
-    tzr = pad_rows(tzr, ntile * TB)
-    tzi = pad_rows(tzi, ntile * TB)
-    trk = pad_rows(trk, ntile * TB, -1)
+    tzr = pad_boxes(tzr, ntile * TB)
+    tzi = pad_boxes(tzi, ntile * TB)
+    trk = pad_boxes(trk, ntile * TB, -1)
 
-    def tgt_map(i, s, lref):
-        return (i, 0)
+    def tgt_map(b, i, s, lref):
+        return (b, i, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(ntile, lists.shape[1] // SW),
-        in_specs=[pl.BlockSpec((TB, n_pad), tgt_map),
-                  pl.BlockSpec((TB, n_pad), tgt_map),
-                  pl.BlockSpec((TB, n_pad), tgt_map)] + src_specs * 5,
+        grid=(B, ntile, lists.shape[-1] // SW),
+        in_specs=[pl.BlockSpec((None, TB, n_pad), tgt_map),
+                  pl.BlockSpec((None, TB, n_pad), tgt_map),
+                  pl.BlockSpec((None, TB, n_pad), tgt_map)] + src_specs * 5,
         out_specs=[
-            pl.BlockSpec((TB, n_pad), tgt_map),
-            pl.BlockSpec((TB, n_pad), tgt_map),
+            pl.BlockSpec((None, TB, n_pad), tgt_map),
+            pl.BlockSpec((None, TB, n_pad), tgt_map),
         ],
     )
     dt = tzr.dtype
@@ -100,14 +104,23 @@ def _p2p_pallas(lists: jax.Array, tzr, tzi, trk, szr, szi, sqr, sqi, srk, *,
     outr, outi = pl.pallas_call(
         _make_kernel(kernel, TB, SW),
         grid_spec=grid_spec,
-        out_shape=[jax.ShapeDtypeStruct((ntile * TB, n_pad), dt)] * 2,
+        out_shape=[jax.ShapeDtypeStruct((B, ntile * TB, n_pad), dt)] * 2,
         compiler_params=compiler_params(
-            dimension_semantics=("parallel", "arbitrary"),
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(lists, tzr, tzi, trk, *([szr] * n), *([szi] * n), *([sqr] * n),
       *([sqi] * n), *([srk] * n))
-    return outr[:nbox], outi[:nbox]
+    return outr[:, :nbox], outi[:, :nbox]
+
+
+@functools.lru_cache(maxsize=None)
+def _p2p_op(kernel: str, tile_boxes: int, stage_width: int, interpret: bool):
+    """Per-problem P2P op whose custom batching rule lowers ``jax.vmap``
+    onto the batch-major kernel grid (one launch for B problems)."""
+    return make_batched_op(functools.partial(
+        _p2p_pallas, kernel=kernel, tile_boxes=tile_boxes,
+        stage_width=stage_width, interpret=interpret))
 
 
 def p2p_pallas(lists: jax.Array, tzr, tzi, trk, szr, szi, sqr, sqi, srk, *,
@@ -118,8 +131,20 @@ def p2p_pallas(lists: jax.Array, tzr, tzi, trk, szr, szi, sqr, sqi, srk, *,
     self-interaction is excluded where source rank == target rank.
 
     Returns (outr, outi): (nbox, n_pad) potential at the dense leaf slots.
-    ``interpret=None`` auto-selects from the JAX platform (compiled on TPU).
+    ``interpret=None`` auto-selects from the JAX platform (compiled on
+    TPU). Batch-native: under ``jax.vmap``, B problems compile to ONE
+    batch-major launch (see ``p2p_pallas_batched``).
     """
+    op = _p2p_op(kernel, tile_boxes, stage_width,
+                 resolve_interpret(interpret))
+    return op(lists, tzr, tzi, trk, szr, szi, sqr, sqi, srk)
+
+
+def p2p_pallas_batched(lists: jax.Array, tzr, tzi, trk, szr, szi, sqr, sqi,
+                       srk, *, kernel: str = "harmonic", tile_boxes: int = 8,
+                       stage_width: int = 1, interpret: bool | None = None):
+    """Batch-major entry: all operands carry a leading problem axis B;
+    one (B, ntile, steps) launch returns (B, nbox, n_pad) planes."""
     return _p2p_pallas(lists, tzr, tzi, trk, szr, szi, sqr, sqi, srk,
                        kernel=kernel, tile_boxes=tile_boxes,
                        stage_width=stage_width,

@@ -26,6 +26,11 @@ lane-geometry heuristic otherwise (interpret-mode timings are noise).
 
 A 2-D sample ``(B, N)`` tunes a shared cap budget across all B problems
 (the ``apply_batched`` serving shape): caps are sized to the worst row.
+On a backend that serves batches through its own hooks (the batched-
+dispatch contract, ``repro.solver.backends``) the tile sweep then times
+the *batched* apply path — the batch-major kernel grids are what
+production serves, and the best tile can differ once B problems share
+the launch — while a "fallback" backend times one row as before.
 """
 from __future__ import annotations
 
@@ -138,6 +143,12 @@ def eval_fused_vmem_bytes(cfg: FmmConfig, tile_boxes: int | None = None,
     rows of every plane family (5 particle + 2 multipole) plus 3 (TB, SW)
     slot planes, double-buffered by Pallas (x2). The (TB, n_t, n_s)
     pairwise P2P tile lives in vector registers and is excluded.
+
+    The estimate is *batch-invariant*: the batch-major grid gives every
+    (b, i, s) step the same per-step blocks — B problems only lengthen
+    the grid (DESIGN.md §2) — so this budget (and the
+    ``tile_candidates`` filter built on it) holds unchanged for
+    ``apply_batched``.
     """
     TB = cfg.tile_boxes if tile_boxes is None else tile_boxes
     SW = cfg.stage_width if stage_width is None else stage_width
@@ -169,17 +180,24 @@ def heuristic_tiles(cfg: FmmConfig) -> FmmConfig:
     return dataclasses.replace(cfg, tile_boxes=tb, stage_width=1)
 
 
-def _apply_timer(backend: str, repeats: int) -> Callable:
-    """Time the jitted end-to-end apply path for one config (seconds)."""
+def _apply_timer(backend: str, repeats: int,
+                 batched: bool = False) -> Callable:
+    """Time the jitted end-to-end apply path for one config (seconds).
+
+    With ``batched=True`` the sample is (B, N) and the measured program
+    is ``jax.vmap`` of the pipeline — the batch-major kernel grids the
+    serving entry point actually runs."""
     from ..core.fmm import fmm_evaluate  # local: avoid cycle at import
 
     def timer(z, q, cfg: FmmConfig) -> float:
-        impls = get_backend(backend, cfg).phase_impls(cfg)
+        be = get_backend(backend, cfg)
+        impls = be.phase_impls(cfg)
+        topo = be.topology_impls(cfg)
 
-        @jax.jit
-        def run(z, q):
-            return fmm_evaluate(fmm_build(z, q, cfg), cfg, **impls)
+        def one(z, q):
+            return fmm_evaluate(fmm_build(z, q, cfg, **topo), cfg, **impls)
 
+        run = jax.jit(jax.vmap(one) if batched else one)
         jax.block_until_ready(run(z, q))           # compile
         best = float("inf")
         for _ in range(repeats):
@@ -204,6 +222,13 @@ def tune_tiles(z: jax.Array, q: jax.Array | None, cfg: FmmConfig, *,
     at the winning tile. Otherwise (reference backend, or interpret mode
     where timings are noise) a lane-geometry heuristic picks the tile.
 
+    A (B, N) sample stays batched when the backend serves batches
+    through its own hooks (``batched_dispatch`` != "fallback"): the
+    timer then measures the vmapped pipeline — i.e. the batch-major
+    kernel grids of ``apply_batched`` — so the tile is tuned for the
+    shape production runs. On a "fallback" backend the sweep times one
+    row, as the batched entry would not run these kernels anyway.
+
     Returns ``(tuned_cfg, trials)`` with trials
     ``[(tile_boxes, stage_width, seconds|None), ...]``.
     """
@@ -215,11 +240,12 @@ def tune_tiles(z: jax.Array, q: jax.Array | None, cfg: FmmConfig, *,
         return tuned, [(tuned.tile_boxes, tuned.stage_width, None)]
 
     z = jnp.asarray(z)
-    if z.ndim == 2:                       # batched sample: time one row
+    batched = z.ndim == 2 and be.batched_dispatch != "fallback"
+    if z.ndim == 2 and not batched:       # fallback backend: time one row
         z = z[0]
         q = None if q is None else jnp.asarray(q)[0]
     q = jnp.ones(z.shape, cfg.complex_dtype) if q is None else jnp.asarray(q)
-    timer = timer or _apply_timer(be.name, repeats)
+    timer = timer or _apply_timer(be.name, repeats, batched=batched)
 
     trials: list = []
 

@@ -22,9 +22,23 @@ tests) pick by string:
                interpret-mode Pallas on CPU is a correctness tool, not a
                fast path
 
+Each backend also declares its **batched-dispatch contract**
+(``batched_dispatch``) — how ``FmmSolver.apply_batched`` may serve B
+problems per call through its hooks:
+
+  "native"     the hooks contain batch-native kernels with custom
+               batching rules: ``jax.vmap`` lowers onto batch-major
+               (B, ...) kernel grids, one launch per phase for the whole
+               batch (the pallas backend)
+  "vmap"       plain jnp hooks that batch under ``jax.vmap`` as-is (the
+               reference backend; the default for new backends)
+  "fallback"   hooks that cannot batch at all — the solver downgrades
+               the batched entry point to the reference sweeps and warns
+
 Third parties register additional backends with ``register_backend`` —
 e.g. a shard_map multi-chip variant — without touching the dispatch
-sites.
+sites; a backend whose kernels lack batching rules declares
+``batched_dispatch="fallback"``.
 """
 from __future__ import annotations
 
@@ -59,14 +73,22 @@ def _platform() -> str:
     return jax.default_backend()
 
 
+#: Valid ``Backend.batched_dispatch`` values (see module docstring):
+#: "native" = batch-major kernel grids behind custom batching rules,
+#: "vmap" = plain-jnp hooks safe under jax.vmap, "fallback" = the
+#: solver downgrades apply_batched to the reference sweeps.
+BATCHED_DISPATCH = ("native", "vmap", "fallback")
+
+
 @dataclasses.dataclass(frozen=True)
 class Backend:
     """Named bundle of per-phase implementations (None -> core jnp path).
 
-    ``vmap_safe`` marks whether the hooks may be wrapped in ``jax.vmap``
-    for ``FmmSolver.apply_batched``; the Pallas scalar-prefetch grids do
-    not batch, so the batched path falls back to the reference sweeps
-    when this is False.
+    ``batched_dispatch`` is the three-way batched-dispatch contract for
+    ``FmmSolver.apply_batched`` (module docstring): "native" and "vmap"
+    hooks serve batches directly under ``jax.vmap`` — batch-major kernel
+    grids vs plain jnp batching — while "fallback" downgrades the
+    batched entry point to the reference sweeps.
     ``supports(cfg)`` gates dispatch (config/kernel compatibility).
     """
 
@@ -78,7 +100,13 @@ class Backend:
     p2l: PhaseImpl = None
     eval_fused: PhaseImpl = None
     leaf_classify: PhaseImpl = None
-    vmap_safe: bool = True
+    batched_dispatch: str = "vmap"
+
+    def __post_init__(self):
+        if self.batched_dispatch not in BATCHED_DISPATCH:
+            raise ValueError(
+                f"batched_dispatch={self.batched_dispatch!r} not in "
+                f"{BATCHED_DISPATCH}")
 
     def supports(self, cfg: FmmConfig) -> bool:
         return True
@@ -158,9 +186,12 @@ def _make_pallas() -> Backend:
     def leaf_classify(cand, valid, centers, radii, cfg):
         return leaf_classify_pallas(cand, valid, centers, radii, cfg)
 
+    # batch-native: every kernel wrapper op carries a custom batching
+    # rule that lowers jax.vmap onto its batch-major (B, ...) grid, so
+    # apply_batched serves through these hooks at kernel speed.
     return Backend(name="pallas", p2p=p2p, m2l=m2l, l2p=l2p,
                    m2l_fused=m2l_fused, p2l=p2l, eval_fused=eval_fused,
-                   leaf_classify=leaf_classify, vmap_safe=False)
+                   leaf_classify=leaf_classify, batched_dispatch="native")
 
 
 register_backend(_make_reference())

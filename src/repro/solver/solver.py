@@ -20,9 +20,14 @@ share one compiled program — the plan cache. ``apply_batched`` vmaps the
 single-problem pipeline over a leading batch axis: because *all*
 adaptivity lives in the contents of statically-shaped padded lists,
 B independent problems of the same config are one XLA program with a
-batch dimension — the "millions of users" serving shape. The batch
+batch dimension — the "millions of users" serving shape. On the pallas
+backend the kernels are *batch-native*: their custom batching rules
+lower the vmap onto batch-major (B, ...) kernel grids, so the batched
+entry point keeps the fused-launch pipeline (one launch per phase for
+the whole batch) instead of downgrading to the jnp sweeps. The batch
 shares one connectivity-cap budget; size it with ``tune`` on a 2-D
-sample.
+sample; ``apply_batched_checked`` max-reduces the overflow scalar
+across the batch.
 
 Backends (``repro.solver.backends``) swap the hot phases between the
 Pallas TPU kernels and the pure-jnp reference sweeps per phase.
@@ -70,22 +75,26 @@ class FmmSolver:
                 f"kernel={cfg.kernel!r}")
         self._impls = self.backend.phase_impls(cfg)
         self._topo = self.backend.topology_impls(cfg)
-        # Batched path: scalar-prefetch Pallas grids don't batch, so a
-        # non-vmap-safe backend serves batches through the reference
-        # sweeps (same answer, jnp path).
-        if self.backend.vmap_safe:
-            batched_impls, batched_topo = self._impls, self._topo
-        else:
+        # Batched path (the three-way batched-dispatch contract, see
+        # repro.solver.backends): "native" hooks lower jax.vmap onto
+        # batch-major kernel grids, "vmap" hooks batch as plain jnp —
+        # both serve batches through the backend's own hooks. Only a
+        # "fallback" backend downgrades to the reference sweeps (same
+        # answer, jnp path).
+        if self.backend.batched_dispatch == "fallback":
             ref = get_backend("reference")
             batched_impls = ref.phase_impls(cfg)
             batched_topo = ref.topology_impls(cfg)
+            batched_name = ref.name
+        else:
+            batched_impls, batched_topo = self._impls, self._topo
+            batched_name = self.backend.name
         # Record what each entry point ACTUALLY runs, so benchmark and
         # serving numbers cannot silently be attributed to the wrong
         # backend (the batched downgrade also warns once, below).
         self.dispatched = {
             "apply": self.backend.name,
-            "apply_batched": (self.backend.name if self.backend.vmap_safe
-                              else "reference"),
+            "apply_batched": batched_name,
         }
         self._warned_batched_fallback = False
         # trace counters: the refresh/apply entry points are compiled
@@ -95,6 +104,8 @@ class FmmSolver:
         self._apply = jax.jit(self._make_core(self._impls, self._topo))
         self._apply_batched = jax.jit(jax.vmap(
             self._make_core(batched_impls, batched_topo)))
+        self._batched_overflow = jax.jit(jax.vmap(
+            self._make_overflow(batched_topo)))
         self._refresh = jax.jit(self._make_build(self._topo))
         self._apply_plan = jax.jit(self._make_evaluate(self._impls))
         self.tune_result: Optional[TuneResult] = None
@@ -131,6 +142,14 @@ class FmmSolver:
             return fmm_build(z, q, cfg, **topo)
 
         return build
+
+    def _make_overflow(self, topo: dict):
+        cfg = self.cfg
+
+        def overflow(z: jax.Array, q: jax.Array) -> jax.Array:
+            return fmm_build(z, q, cfg, **topo).conn.overflow
+
+        return overflow
 
     def _make_evaluate(self, impls: dict):
         cfg = self.cfg
@@ -185,25 +204,55 @@ class FmmSolver:
         ``z``/``q``: (B, N) with the same ``FmmConfig`` (one shared cap
         budget). Returns (B, N) potentials, each row in its input order.
 
-        A non-vmap-safe backend (pallas: scalar-prefetch grids don't
-        batch) serves this entry through the reference sweeps; the
-        downgrade is recorded in ``self.dispatched["apply_batched"]``
-        and warned about once per solver.
+        Serves through the backend's own hooks — on the pallas backend
+        the custom batching rules lower the vmap onto batch-major kernel
+        grids, so B problems are still one launch per fused phase. Only
+        a ``batched_dispatch="fallback"`` backend downgrades to the
+        reference sweeps; the downgrade is recorded in
+        ``self.dispatched["apply_batched"]`` and warned about once per
+        solver.
+
+        Like ``apply``, trusts the caps: an overflowing batch member
+        silently drops interactions. ``apply_batched_checked`` adds the
+        batch-wide overflow guard.
         """
-        if z.ndim != 2:
-            raise ValueError(f"apply_batched wants (B, N); got {z.shape}")
-        if z.shape[-1] != self.cfg.n:
-            raise ValueError(f"N={z.shape[-1]} != cfg.n={self.cfg.n}")
+        self._validate_batched(z, q)
         if (self.dispatched["apply_batched"] != self.backend.name
                 and not self._warned_batched_fallback):
             self._warned_batched_fallback = True
             warnings.warn(
-                f"backend {self.backend.name!r} is not vmap-safe: "
-                f"apply_batched dispatches the "
-                f"{self.dispatched['apply_batched']!r} sweeps instead "
+                f"backend {self.backend.name!r} declares "
+                "batched_dispatch='fallback': apply_batched dispatches "
+                f"the {self.dispatched['apply_batched']!r} sweeps instead "
                 "(same answer; do not attribute batched timings to "
                 f"{self.backend.name!r})", RuntimeWarning, stacklevel=2)
         return self._apply_batched(z, q)
+
+    def apply_batched_checked(self, z: jax.Array, q: jax.Array) -> jax.Array:
+        """``apply_batched`` plus cap-overflow validation across the
+        whole batch (one extra batched topological build). The overflow
+        scalar is max-reduced over the B problems, so a single
+        overflowing batch member raises RuntimeError — the same re-tune
+        error ``apply_checked`` gives one problem — instead of silently
+        returning truncated potentials for that row."""
+        self._validate_batched(z, q)
+        overflow = int(jax.device_get(
+            jnp.max(self._batched_overflow(z, q))))
+        if overflow:
+            raise RuntimeError(
+                f"connectivity caps overflow by {overflow} on the worst "
+                f"batch member (strong_cap={self.cfg.strong_cap}, "
+                f"weak_cap={self.cfg.weak_cap}); re-tune on this workload")
+        return self.apply_batched(z, q)
+
+    def _validate_batched(self, z: jax.Array, q: jax.Array) -> None:
+        if z.ndim != 2:
+            raise ValueError(f"apply_batched wants (B, N); got {z.shape}")
+        if z.shape[-1] != self.cfg.n:
+            raise ValueError(f"N={z.shape[-1]} != cfg.n={self.cfg.n}")
+        if q.shape != z.shape:
+            raise ValueError(
+                f"apply_batched wants q of shape {z.shape}; got {q.shape}")
 
     def refresh(self, z: jax.Array, q: jax.Array) -> FmmPlan:
         """Rebuild tree + connectivity for moved particles — the cheap

@@ -1,0 +1,181 @@
+"""Batch-native Pallas serving: `apply_batched` on the pallas backend
+dispatches the batch-major kernel grids (no reference downgrade).
+
+Covers the batched-vs-stacked-single-apply parity sweep (B, G-kernel,
+tilings incl. ragged), the jaxpr launch-count property (B problems still
+compile to the single 3-launch evaluation pipeline, not B copies), the
+batch-wide overflow guard, and a fast B > 1 smoke test that the CI jax
+version matrix runs explicitly so the custom batching rules cannot rot
+against either supported jax.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from _jaxpr import count_pallas_calls
+from repro.core import FmmConfig, fmm_build, fmm_evaluate
+from repro.data.synthetic import particles
+from repro.solver import FmmSolver, get_backend
+
+
+def _cfg(kernel="harmonic", tb=8, sw=1, n=256, nlevels=2):
+    return FmmConfig(n=n, nlevels=nlevels, p=8, dtype="f64", kernel=kernel,
+                     strong_cap=40, weak_cap=64, tile_boxes=tb,
+                     stage_width=sw)
+
+
+def _batch(b, n, dist="normal", seed0=0):
+    zs, qs = [], []
+    for i in range(b):
+        z, q = particles(dist, n, seed0 + i)
+        zs.append(np.asarray(z))
+        qs.append(np.asarray(q))
+    return jnp.asarray(np.stack(zs)), jnp.asarray(np.stack(qs))
+
+
+# ---------------------------------------------------------------------------
+# parity: apply_batched vs stacked single-problem apply
+# ---------------------------------------------------------------------------
+
+# B sweep {1, 3, 8} x tile_boxes {1, 8} + the ragged tiling (16 leaf
+# boxes, 16 % 3 != 0), paired to keep the interpret-mode runtime sane.
+SWEEP = [(1, 8, 1), (3, 1, 1), (3, 3, 1), (8, 8, 1), (3, 8, 2)]
+
+
+@pytest.mark.parametrize("kernel", ["harmonic", "log"])
+@pytest.mark.parametrize("B,tb,sw", SWEEP)
+def test_apply_batched_matches_stacked_apply(kernel, B, tb, sw):
+    cfg = _cfg(kernel, tb, sw)
+    solver = FmmSolver.build(cfg, "pallas")
+    assert solver.dispatched["apply_batched"] == "pallas"
+    zb, qb = _batch(B, cfg.n)
+    got = np.asarray(solver.apply_batched(zb, qb))
+    ref = np.stack([np.asarray(solver.apply(zb[i], qb[i]))
+                    for i in range(B)])
+    scale = np.abs(ref).max()
+    np.testing.assert_allclose(got, ref, atol=1e-10 * scale)
+    if B > 1:   # genuinely different problems per row
+        assert np.abs(got[0] - got[1]).max() / scale > 1e-3
+
+
+def test_apply_batched_smoke():
+    """Fast B > 1 smoke (run explicitly by the CI jax version matrix):
+    the native batched pallas dispatch stays finite and backend-tagged."""
+    cfg = _cfg(n=128, nlevels=1)
+    solver = FmmSolver.build(cfg, "pallas")
+    zb, qb = _batch(2, cfg.n, dist="uniform")
+    phi = np.asarray(solver.apply_batched(zb, qb))
+    assert phi.shape == (2, cfg.n)
+    assert np.isfinite(phi).all()
+    assert solver.dispatched["apply_batched"] == "pallas"
+
+
+# ---------------------------------------------------------------------------
+# launch-count property: one batch-major launch per fused phase
+# ---------------------------------------------------------------------------
+
+def _interpreted_impls(cfg):
+    from repro.kernels import eval_fused_apply, p2l_apply
+
+    impls = dict(get_backend("pallas", cfg).phase_impls(cfg))
+
+    def eval_fused(local, leaf, tree, conn, c, idx):
+        return eval_fused_apply(local, leaf, tree, conn, c, idx,
+                                interpret=True)
+
+    def p2l(tree, conn, c, idx, rho):
+        return p2l_apply(tree, conn, c, idx, rho, interpret=True)
+
+    impls["eval_fused_impl"] = eval_fused
+    impls["p2l_impl"] = p2l
+    return impls
+
+
+def test_batched_pipeline_is_still_three_launches():
+    """B problems compile to the SAME single 3-launch evaluation
+    pipeline as one problem — fused downward M2L + P2L + fused
+    evaluation on batch-major grids — not B copies of it."""
+    cfg = _cfg("harmonic")
+    assert cfg.use_p2l_m2p
+    impls = _interpreted_impls(cfg)
+
+    def evaluate(z, q):
+        return fmm_evaluate(fmm_build(z, q, cfg), cfg, **impls)
+
+    zb, qb = _batch(4, cfg.n)
+    batched = jax.make_jaxpr(jax.vmap(evaluate))(zb, qb)
+    single = jax.make_jaxpr(evaluate)(zb[0], qb[0])
+    assert count_pallas_calls(single.jaxpr) == 3
+    assert count_pallas_calls(batched.jaxpr) == 3
+
+
+def test_batched_full_core_launch_count_matches_single():
+    """The full pipeline (topology classify kernel included) batches
+    without multiplying launches either."""
+    cfg = _cfg("harmonic")
+    be = get_backend("pallas", cfg)
+    impls, topo = _interpreted_impls(cfg), be.topology_impls(cfg)
+
+    def core(z, q):
+        return fmm_evaluate(fmm_build(z, q, cfg, **topo), cfg, **impls)
+
+    zb, qb = _batch(3, cfg.n)
+    n_single = count_pallas_calls(
+        jax.make_jaxpr(core)(zb[0], qb[0]).jaxpr)
+    n_batched = count_pallas_calls(
+        jax.make_jaxpr(jax.vmap(core))(zb, qb).jaxpr)
+    assert n_batched == n_single == 4   # 3 evaluation + 1 leaf classify
+
+
+# ---------------------------------------------------------------------------
+# batch-wide overflow guard
+# ---------------------------------------------------------------------------
+
+def test_apply_batched_checked_raises_when_any_member_overflows():
+    """The overflow scalar is max-reduced across the batch: one
+    overflowing member raises the same re-tune error as apply_checked,
+    instead of silently returning truncated potentials for that row."""
+    import dataclasses
+    cfg = _cfg()
+    tiny = dataclasses.replace(cfg, strong_cap=2, weak_cap=2)
+    zb, qb = _batch(2, cfg.n)
+    solver = FmmSolver.build(tiny, "reference")
+    assert int(jax.device_get(
+        jnp.max(solver._batched_overflow(zb, qb)))) > 0
+    with pytest.raises(RuntimeError, match="overflow"):
+        solver.apply_batched_checked(zb, qb)
+    # ...while an in-cap batch returns the plain batched answer
+    ok = FmmSolver.build(cfg, "reference")
+    np.testing.assert_array_equal(
+        np.asarray(ok.apply_batched_checked(zb, qb)),
+        np.asarray(ok.apply_batched(zb, qb)))
+
+
+def test_apply_batched_checked_validates_shapes():
+    solver = FmmSolver.build(_cfg(), "reference")
+    z, q = _batch(2, 256)
+    with pytest.raises(ValueError):
+        solver.apply_batched_checked(z[0], q[0])
+
+
+# ---------------------------------------------------------------------------
+# batch-major kernel entries (direct, without the solver front-end)
+# ---------------------------------------------------------------------------
+
+def test_l2p_pallas_batched_matches_per_problem_loop():
+    from repro.kernels import l2p_pallas, l2p_pallas_batched
+    rng = np.random.default_rng(0)
+    B, nbox, P, n_pad, p = 3, 8, 128, 128, 6
+    br, bi = (jnp.asarray(rng.normal(size=(B, nbox, P))) for _ in range(2))
+    tr, ti = (jnp.asarray(rng.normal(size=(B, nbox, n_pad)))
+              for _ in range(2))
+    outr, outi = l2p_pallas_batched(br, bi, tr, ti, p=p, tile_boxes=3,
+                                    interpret=True)
+    for b in range(B):
+        rr, ri = l2p_pallas(br[b], bi[b], tr[b], ti[b], p=p, tile_boxes=3,
+                            interpret=True)
+        np.testing.assert_allclose(np.asarray(outr[b]), np.asarray(rr),
+                                   atol=1e-12)
+        np.testing.assert_allclose(np.asarray(outi[b]), np.asarray(ri),
+                                   atol=1e-12)

@@ -31,6 +31,16 @@ def test_compare_fails_on_regression():
     assert [v[0] for v in violations] == ["fmm_phases/p2p"]
 
 
+def test_batched_serving_rows_are_gated():
+    """The batched-serving entries are first-class phase rows: a
+    regression of apply_batched throughput fails the gate."""
+    base = _rec([("batched/B=4_batched", 1000.0)])
+    fresh = _rec([("batched/B=4_batched", 1300.0)])
+    violations, checked = bc.compare(base, fresh, threshold=0.25)
+    assert checked
+    assert [v[0] for v in violations] == ["batched/B=4_batched"]
+
+
 def test_compare_skips_noise_missing_and_nonphase_rows():
     base = _rec([("fmm_phases/connect", 50.0),      # below min_us: noise
                  ("fmm_phases/l2p", 1000.0),        # gone in fresh (fused)
@@ -101,3 +111,4 @@ def test_committed_baseline_is_readable():
     names = {r["name"] for r in record["results"]}
     assert any(n.startswith("fmm_phases/") for n in names)
     assert any(n.startswith("table5_1/") for n in names)
+    assert any(n.startswith("batched/") for n in names)
