@@ -1,0 +1,120 @@
+"""Guarded-execution overhead + recovery-latency benchmark.
+
+Pins down the two costs of the robustness layer (DESIGN.md §9):
+
+  steady state   ``apply_guarded`` on a healthy input vs plain ``apply``
+                 — the in-graph health plane rides the same launch, so
+                 the difference is one host read of a few scalars. The
+                 acceptance gate (asserted here): <= 5% overhead.
+  recovery       per-rung latency of an actual ladder walk under the
+                 fault injectors — cold (first escalation pays the
+                 neighbor plan's compile) vs warm (the ``FmmSolver``
+                 LRU already holds the lattice, a recovery is detection
+                 + plan switch), and the forced walk to the direct rung.
+
+Rows (``guarded/`` prefix, gated in ``scripts/bench_compare.py``):
+  guarded/apply            plain apply baseline
+  guarded/apply_guarded    guarded steady state (the <= 5% gate)
+  guarded/refresh_guarded  guarded plan refresh steady state
+  guarded/recover_caps_cold   first cap escalation (includes compile)
+  guarded/recover_caps_warm   escalation with a precompiled lattice
+  guarded/recover_direct      full walk to the O(N^2) last resort
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import particles
+from repro.solver import FmmSolver, GuardedSolver
+from repro.testing import force_cap_overflow, truncate_interaction_lists
+
+#: steady-state gate: relative bound + an absolute floor so sub-ms CPU
+#: timings don't fail on host-read jitter
+OVERHEAD_REL = 0.05
+OVERHEAD_ABS = 2e-4
+
+
+def _best_of(fn, repeats):
+    jax.block_until_ready(fn())          # warm-up: exclude trace+compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _once(fn):
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def run(n: int = 45 * 256, p: int = 10, backend: str = "auto",
+        repeats: int = 5):
+    """Benchmark-harness entry: steady-state overhead + recovery rungs."""
+    from repro.configs.fmm2d import fmm_config
+
+    z, q = particles("uniform", n, 0)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+    cfg = fmm_config(n, p=p)
+    FmmSolver.cache_clear()
+
+    solver = FmmSolver.build(cfg, backend)
+    name = solver.dispatched["apply"]
+    apply_t = _best_of(lambda: solver.apply(z, q), repeats)
+
+    guard = GuardedSolver(cfg, backend)
+    guarded_t = _best_of(lambda: guard.apply_guarded(z, q)[0], repeats)
+    overhead = guarded_t / apply_t - 1.0
+    assert guarded_t <= apply_t * (1.0 + OVERHEAD_REL) + OVERHEAD_ABS, (
+        f"guarded steady state {guarded_t * 1e6:.0f}us exceeds the "
+        f"{OVERHEAD_REL:.0%} overhead gate over apply "
+        f"({apply_t * 1e6:.0f}us)")
+
+    refresh_t = _best_of(
+        lambda: guard.refresh_guarded(z, q)[0].conn.overflow, repeats)
+
+    # recovery latency: drop enough that the fullest list class
+    # overflows at the declared caps but fits after one doubling
+    margins = solver.stats(z, q)["margins"]
+    drop = min(min(margins.values()) + 4,
+               min(cfg.strong_cap, cfg.weak_cap) - 1)
+
+    with truncate_interaction_lists(drop=drop):
+        g0 = GuardedSolver(cfg, backend, max_cap_doublings=2)
+        t0 = time.perf_counter()
+        _, cold_report = g0.apply_guarded(z, q)
+        cold = time.perf_counter() - t0
+        rungs = len(cold_report.attempts)
+
+        def walk():
+            # fresh guard each call: primary overflows, escalation hits
+            # the already-compiled lattice neighbor (the LRU is warm)
+            gi = GuardedSolver(cfg, backend, max_cap_doublings=2)
+            return gi.apply_guarded(z, q)[0]
+
+        warm = _best_of(walk, repeats)
+
+    with force_cap_overflow(strong=1, weak=1):
+        gd = GuardedSolver(cfg, backend, max_cap_doublings=1)
+        jax.block_until_ready(gd.apply_guarded(z, q)[0])   # compile walk
+        direct_walk = _once(
+            lambda: GuardedSolver(cfg, backend,
+                                  max_cap_doublings=1).apply_guarded(z, q)[0])
+
+    return [
+        ("guarded/apply", apply_t * 1e6, f"backend={name} N={n}"),
+        ("guarded/apply_guarded", guarded_t * 1e6,
+         f"overhead={overhead:+.1%} (gate {OVERHEAD_REL:.0%})"),
+        ("guarded/refresh_guarded", refresh_t * 1e6, name),
+        ("guarded/recover_caps_cold", cold * 1e6,
+         f"drop={drop} includes neighbor-plan compile"),
+        ("guarded/recover_caps_warm", warm * 1e6,
+         f"rungs={rungs} lattice precompiled"),
+        ("guarded/recover_direct", direct_walk * 1e6,
+         "full walk to O(N^2)"),
+    ]

@@ -5,9 +5,11 @@ particles advect a little every step, so the tree + connectivity must be
 rebuilt thousands of times under a *fixed* cap/tile budget. The cost
 model this benchmark pins down:
 
-  cold   first ``FmmSolver.refresh`` — trace + compile + build
+  cold   first guarded refresh — trace + compile + build
   refresh steady-state per-step topology rebuild (the compiled
-         single-sort build + batched connect; no re-trace)
+         single-sort build + batched connect; no re-trace), via
+         ``refresh_guarded`` — the production time-stepping path now
+         includes the per-step health read and re-plans on cap drift
   apply_plan steady-state evaluation on a refreshed plan
   step   refresh + apply_plan (one full time step's FMM work)
 
@@ -24,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.synthetic import particles
-from repro.solver import FmmSolver
+from repro.solver import FmmSolver, GuardedSolver
 
 
 def _best_of(fn, repeats):
@@ -46,12 +48,13 @@ def run(n: int = 45 * 256, p: int = 10, steps: int = 5,
     z, q = jnp.asarray(z), jnp.asarray(q)
     cfg = fmm_config(n, p=p)
     FmmSolver.cache_clear()
-    solver = FmmSolver.build(cfg, backend)
+    guard = GuardedSolver(cfg, backend)
 
     t0 = time.perf_counter()
-    plan = solver.refresh(z, q)
+    plan, _ = guard.refresh_guarded(z, q)
     jax.block_until_ready(plan.conn.overflow)
     cold = time.perf_counter() - t0
+    solver = guard.solver     # possibly promoted past an escalation
 
     # advected positions: a small deterministic drift, re-clamped to the
     # unit square (per component — complex clip compares lexicographically)
@@ -66,14 +69,17 @@ def run(n: int = 45 * 256, p: int = 10, steps: int = 5,
     drifts = [drifted() for _ in range(steps)]
 
     refresh = min(
-        _best_of(lambda zi=zi: solver.refresh(zi, q).conn.overflow, repeats)
+        _best_of(
+            lambda zi=zi: guard.refresh_guarded(zi, q)[0].conn.overflow,
+            repeats)
         for zi in drifts)
-    apply_plan = _best_of(lambda: solver.apply_plan(plan), repeats)
+    apply_plan = _best_of(lambda: guard.apply_plan(plan), repeats)
     step = _best_of(
-        lambda: solver.apply_plan(solver.refresh(drifts[0], q)), repeats)
+        lambda: guard.apply_plan(guard.refresh_guarded(drifts[0], q)[0]),
+        repeats)
 
-    assert solver.trace_counts["build"] == 1, (
-        f"refresh re-traced ({solver.trace_counts['build']}x): the "
+    assert guard.trace_counts["build"] == 1, (
+        f"refresh re-traced ({guard.trace_counts['build']}x): the "
         "time-stepping path must compile once")
     assert refresh * 2 < cold, (
         f"steady-state refresh ({refresh:.4f}s) not << cold build "

@@ -20,24 +20,25 @@ import time
 sys.path.insert(0, "src")
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.configs.fmm2d import fmm_config
 from repro.solver import FmmSolver
 
 
-def velocity(z, gamma, solver):
+def velocity(z, gamma, guard):
     """u + iv at each vortex (harmonic-kernel FMM, Biot-Savart in 2D).
 
     Splits the evaluation at the topology/evaluation seam
-    (``refresh`` + ``apply_plan``) so the per-step plan is available for
-    overflow monitoring without a second topology build. Returns
-    (velocity, plan)."""
-    plan = solver.refresh(z, gamma.astype(z.dtype))
-    phi = solver.apply_plan(plan)
+    (``refresh_guarded`` + ``apply_plan``): the guarded refresh reads
+    the plan's cap margins (one host read, no extra builds) and — when
+    advection drifts the layout past the t=0-tuned caps — re-plans at
+    escalated caps instead of dropping interactions or dying mid-run.
+    Returns (velocity, GuardReport)."""
+    plan, report = guard.refresh_guarded(z, gamma.astype(z.dtype))
+    phi = guard.apply_plan(plan)
     # phi_i = sum_j G_j/(z_j - z_i);  u - iv = phi/(2 pi i) -> conj
-    return jnp.conj(phi / (2j * jnp.pi)), plan
+    return jnp.conj(phi / (2j * jnp.pi)), report
 
 
 def main():
@@ -64,30 +65,34 @@ def main():
     # tune once on the initial layout; the caps keep head-room (margin)
     # for the advected positions so every step stays on the jit path
     solver = FmmSolver.build(cfg, "auto").tune(z, g, margin=1.5)
+    # guarded refresh: every step reads the health margins; cap drift
+    # re-plans through the escalation lattice instead of aborting
+    guard = solver.guarded(max_cap_doublings=3)
     print(f"[vortex] N={args.n} vortices, {args.steps} RK2 steps, "
           f"p={args.p}, levels={cfg.nlevels}, "
-          f"caps={solver.cfg.strong_cap}/{solver.cfg.weak_cap}")
+          f"caps={guard.cfg.strong_cap}/{guard.cfg.weak_cap}")
 
     imp0 = complex(np.sum(gamma * z0))
     t0 = time.perf_counter()
+    replans = 0
     for s in range(args.steps):
-        u1, plan = velocity(z, g, solver)
+        u1, rep1 = velocity(z, g, guard)
         zm = z + 0.5 * args.dt * u1              # RK2 midpoint
-        u2, plan_mid = velocity(zm, g, solver)
+        u2, rep2 = velocity(zm, g, guard)
         z = z + args.dt * u2
+        replans += rep1.retries + rep2.retries
+        if rep1.retries or rep2.retries:
+            print(f"[vortex] step {s:3d}  re-planned: "
+                  f"{(rep2 if rep2.retries else rep1).summary()}  "
+                  f"caps now {guard.cfg.strong_cap}/{guard.cfg.weak_cap}")
         if s % 5 == 0 or s == args.steps - 1:
             imp = complex(np.sum(gamma * np.asarray(z)))
             drift = abs(imp - imp0) / max(abs(imp0), 1e-12)
-            # advected positions can drift past the t=0-tuned caps;
-            # overflow would silently drop interactions, so monitor the
-            # plans of BOTH evaluations this step actually ran (two
-            # scalar reads — no extra builds)
-            ov = max(int(plan.conn.overflow), int(plan_mid.conn.overflow))
             print(f"[vortex] step {s:3d}  impulse drift {drift:.2e}  "
-                  f"overflow {ov}  "
+                  f"replans {replans}  "
                   f"({(time.perf_counter()-t0)/(s+1):.2f} s/step avg)")
-            assert ov == 0, "caps overflowed; re-tune with larger margin"
-    assert solver.trace_counts["build"] == 1, "refresh re-traced mid-run"
+    assert guard.trace_counts["build"] == 1 or replans > 0, \
+        "refresh re-traced mid-run without a cap re-plan"
     sep = abs(np.mean(np.asarray(z)[:n2]) - np.mean(np.asarray(z)[n2:]))
     print(f"[vortex] final cluster separation {sep:.3f} (pair translates, "
           f"separation ~const)")

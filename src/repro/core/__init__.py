@@ -8,17 +8,21 @@ Public API:
 """
 from .config import FmmConfig, num_levels_for, max_leaf_size
 from .topology import (Tree, build_tree, leaf_particle_index, leaf_ids,
-                       Connectivity, build_connectivity, connectivity_stats)
-from .fmm import (FmmPlan, fmm_build, fmm_evaluate, fmm_potential,
-                  fmm_potential_checked, fmm_potential_with_stats, p2m,
+                       Connectivity, MARGIN_CLASSES, build_connectivity,
+                       connectivity_stats)
+from .fmm import (FmmPlan, Health, HEALTH_CLASSES, fmm_build, fmm_evaluate,
+                  fmm_potential, fmm_potential_checked,
+                  fmm_potential_with_stats, health_of, p2m,
                   upward, downward, l2p)
 from .direct import direct_potential, direct_potential_numpy, rel_error_inf
 
 __all__ = [
     "FmmConfig", "num_levels_for", "max_leaf_size",
     "Tree", "build_tree", "leaf_particle_index", "leaf_ids",
-    "Connectivity", "build_connectivity", "connectivity_stats",
-    "FmmPlan", "fmm_build", "fmm_evaluate", "fmm_potential",
-    "fmm_potential_checked", "fmm_potential_with_stats", "p2m", "upward", "downward", "l2p",
+    "Connectivity", "MARGIN_CLASSES", "build_connectivity",
+    "connectivity_stats",
+    "FmmPlan", "Health", "HEALTH_CLASSES", "fmm_build", "fmm_evaluate",
+    "fmm_potential", "fmm_potential_checked", "fmm_potential_with_stats",
+    "health_of", "p2m", "upward", "downward", "l2p",
     "direct_potential", "direct_potential_numpy", "rel_error_inf",
 ]

@@ -25,8 +25,9 @@ import jax.numpy as jnp
 
 from . import expansions as E
 from .config import FmmConfig
-from .topology import (Connectivity, Tree, build_connectivity, build_tree,
-                       leaf_ids, leaf_particle_index)
+from .topology import (MARGIN_CLASSES, Connectivity, Tree,
+                       build_connectivity, build_tree, leaf_ids,
+                       leaf_particle_index)
 
 
 class FmmPlan(NamedTuple):
@@ -34,6 +35,51 @@ class FmmPlan(NamedTuple):
 
     tree: Tree
     conn: Connectivity
+
+
+#: Order of the per-class entries in ``Health.margins`` (the
+#: connectivity's ``MARGIN_CLASSES``, re-exported at the pipeline level).
+HEALTH_CLASSES = MARGIN_CLASSES
+
+
+class Health(NamedTuple):
+    """In-graph health plane of one evaluation (DESIGN.md §9).
+
+    A handful of scalars computed *inside* the compiled pipeline, so
+    validated entry points (``FmmSolver.apply_checked``, the guarded
+    ladder) read execution health with ONE ``device_get`` on the launch
+    they already ran — no second eager topology build:
+
+      margins           (5,) int32, ``HEALTH_CLASSES`` order — slots left
+                        on the fullest interaction list per class;
+                        negative = that many entries were silently
+                        dropped (the answer is wrong)
+      overflow          () int32 — max dropped-entry count (0 = healthy)
+      nonfinite_input   () bool — any NaN/Inf in z or q
+      nonfinite_output  () bool — any NaN/Inf in phi
+    """
+
+    margins: jax.Array
+    overflow: jax.Array
+    nonfinite_input: jax.Array
+    nonfinite_output: jax.Array
+
+
+def _any_nonfinite(*arrays: jax.Array) -> jax.Array:
+    flag = jnp.asarray(False)
+    for a in arrays:
+        flag = flag | ~jnp.all(jnp.isfinite(a))
+    return flag
+
+
+def health_of(plan: FmmPlan, z: jax.Array, q: jax.Array,
+              phi: jax.Array) -> Health:
+    """Assemble the health plane for an evaluation of ``plan`` on
+    (z, q) that produced ``phi``. Pure graph ops — jit/vmap-safe."""
+    return Health(margins=plan.conn.margins,
+                  overflow=plan.conn.overflow,
+                  nonfinite_input=_any_nonfinite(z, q),
+                  nonfinite_output=_any_nonfinite(phi))
 
 
 def effective_radii(tree: Tree, cfg: FmmConfig) -> list[jax.Array]:
@@ -447,5 +493,6 @@ def fmm_potential_checked(z, q, cfg: FmmConfig, max_grow: int = 3):
             return out.at[plan.tree.perm].set(phi_sorted), cfg
         cfg = dataclasses.replace(cfg, strong_cap=2 * cfg.strong_cap,
                                   weak_cap=0)
-    raise RuntimeError(
+    from ..errors import CapOverflowError
+    raise CapOverflowError(
         f"interaction lists overflow even at strong_cap={cfg.strong_cap}")

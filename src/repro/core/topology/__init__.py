@@ -17,12 +17,12 @@ of the input data". This package is that phase for the TPU port:
 """
 from .tree import (Tree, build_tree, build_tree_lexsort, leaf_ids,
                    leaf_particle_index, leaf_particle_index_loop)
-from .connectivity import (Connectivity, build_connectivity,
+from .connectivity import (MARGIN_CLASSES, Connectivity, build_connectivity,
                            connectivity_stats, leaf_classify_reference)
 
 __all__ = [
     "Tree", "build_tree", "build_tree_lexsort", "leaf_ids",
     "leaf_particle_index", "leaf_particle_index_loop",
-    "Connectivity", "build_connectivity", "connectivity_stats",
-    "leaf_classify_reference",
+    "Connectivity", "MARGIN_CLASSES", "build_connectivity",
+    "connectivity_stats", "leaf_classify_reference",
 ]

@@ -42,6 +42,10 @@ from .tree import Tree
 _INT_MAX = jnp.iinfo(jnp.int32).max
 
 
+#: Order of the per-class cap-margin vector (``Connectivity.margins``).
+MARGIN_CLASSES = ("strong", "weak", "p2p", "p2l", "m2p")
+
+
 class Connectivity(NamedTuple):
     strong: tuple[jax.Array, ...]   # level l: (4**l, strong_cap) int32, -1 pad
     weak: tuple[jax.Array, ...]     # level l: (4**l, weak_cap)
@@ -49,6 +53,12 @@ class Connectivity(NamedTuple):
     p2l: jax.Array                  # leaf: (4**L, strong_cap)
     m2p: jax.Array                  # leaf: (4**L, strong_cap)
     overflow: jax.Array             # scalar int32; 0 iff no list overflowed
+    margins: jax.Array              # (5,) int32 per-class cap margins in
+    #                                 MARGIN_CLASSES order: slots left on the
+    #                                 fullest row (min over levels); negative
+    #                                 = that many entries were dropped. The
+    #                                 in-graph health plane reads this —
+    #                                 overflow == max(0, -margins.min()).
 
 
 def _keyed(vals: jax.Array, mask: jax.Array) -> jax.Array:
@@ -59,15 +69,16 @@ def _keyed(vals: jax.Array, mask: jax.Array) -> jax.Array:
 def _compact(vals: jax.Array, mask: jax.Array, cap: int):
     """Row-compact masked entries to the front, pad with -1, clip to cap.
 
-    Returns (compacted (B, cap), overflow (B,)) where overflow counts
-    entries dropped by the cap.
+    Returns (compacted (B, cap), margin ()) where margin is the cap
+    margin of the fullest row — ``cap - max(count)``, negative when that
+    many entries were dropped.
     """
     srt = jnp.sort(_keyed(vals, mask), axis=-1)
     count = mask.sum(axis=-1)
     kept = srt[..., :cap]
     out = jnp.where(kept == _INT_MAX, -1, kept)
-    overflow = jnp.maximum(count - cap, 0)
-    return out, overflow
+    margin = (cap - count.max()).astype(jnp.int32)
+    return out, margin
 
 
 def _theta_masks(cbx, cby, rb, ccx, ccy, rc, valid, theta):
@@ -132,19 +143,28 @@ def leaf_classify_reference(cand, valid, centers, radii, cfg: FmmConfig):
 def _batched_compact(groups):
     """ONE sort for every (keys, cap) group: stack the same-width keyed
     arrays, sort once along the slot axis, then slice each group at its
-    own cap. Returns (lists, overflow) aligned with ``groups``."""
+    own cap. Returns (lists, margins) aligned with ``groups``; each
+    margin is ``cap - max(count)`` over the group's rows (negative =
+    entries dropped)."""
     keys = jnp.concatenate([k for k, _ in groups], axis=0)
     srt = jnp.sort(keys, axis=-1)
     counts = (keys != _INT_MAX).sum(axis=-1)
-    lists, overflows = [], []
+    lists, margins = [], []
     row = 0
     for k, cap in groups:
         nb = k.shape[0]
         kept = srt[row:row + nb, :cap]
         lists.append(jnp.where(kept == _INT_MAX, -1, kept))
-        overflows.append(jnp.maximum(counts[row:row + nb] - cap, 0).max())
+        margins.append((cap - counts[row:row + nb].max()).astype(jnp.int32))
         row += nb
-    return lists, jnp.maximum(jnp.stack(overflows), 0).max().astype(jnp.int32)
+    return lists, margins
+
+
+def _overflow_of(margins) -> jax.Array:
+    """Dropped-entry count implied by a set of margins (0 iff all >= 0)."""
+    worst = jnp.minimum(jnp.stack([jnp.asarray(m) for m in margins]).min(),
+                        0)
+    return (-worst).astype(jnp.int32)
 
 
 def build_connectivity(tree: Tree, cfg: FmmConfig,
@@ -167,7 +187,10 @@ def build_connectivity(tree: Tree, cfg: FmmConfig,
 
     strong = [jnp.zeros((1, S), jnp.int32).at[:, 1:].set(-1)]  # root: self
     weak = [jnp.full((1, W), -1, jnp.int32)]
-    overflow = jnp.zeros((), jnp.int32)
+    # per-class cap margins (MARGIN_CLASSES order); root lists are
+    # structural: strong = self (1 entry), weak = empty
+    root_strong_margin = jnp.asarray(S - 1, jnp.int32)
+    root_weak_margin = jnp.asarray(W, jnp.int32)
 
     if L == 0:
         # Degenerate 1-box problem: the root strong list is *defined* as
@@ -180,14 +203,18 @@ def build_connectivity(tree: Tree, cfg: FmmConfig,
                                         tree.radii[0])
         p2p_m, p2l_m, m2p_m = _swapped_masks(cbx, cby, tree.radii[0], ccx,
                                              ccy, rc, valid, cfg)
-        (p2p, p2l, m2p), of = _batched_compact(
+        (p2p, p2l, m2p), class_margins = _batched_compact(
             [(_keyed(st, p2p_m), S), (_keyed(st, p2l_m), S),
              (_keyed(st, m2p_m), S)])
+        margins = jnp.stack([root_strong_margin, root_weak_margin]
+                            + class_margins)
         return Connectivity(strong=tuple(strong), weak=tuple(weak),
                             p2p=p2p, p2l=p2l, m2p=m2p,
-                            overflow=jnp.maximum(overflow, of))
+                            overflow=_overflow_of([margins]),
+                            margins=margins)
 
     weak_keys = []
+    strong_margins = [root_strong_margin]
     leaf_keys = None
     for l in range(1, L + 1):
         nb = 4**l
@@ -211,23 +238,31 @@ def build_connectivity(tree: Tree, cfg: FmmConfig,
                                               ccy, rc, valid, theta)
         weak_keys.append(_keyed(cand, weak_mask))
         # the recursion consumes strong[l] next iteration: compact in-loop
-        s_l, s_of = _compact(cand, strong_mask, S)
+        s_l, s_mg = _compact(cand, strong_mask, S)
         strong.append(s_l)
-        overflow = jnp.maximum(overflow, s_of.max().astype(jnp.int32))
+        strong_margins.append(s_mg)
 
     # ---- batched compaction: one sort over the flattened (sum 4**l, 4S)
     # stack — every level's weak list + the leaf's five classes ---------
     strong_key, _, p2p_key, p2l_key, m2p_key = leaf_keys
     groups = ([(k, W) for k in weak_keys]
               + [(strong_key, S), (p2p_key, S), (p2l_key, S), (m2p_key, S)])
-    lists, of = _batched_compact(groups)
+    lists, group_margins = _batched_compact(groups)
     weak_lists, (strong_L, p2p, p2l, m2p) = lists[:L], lists[L:]
+    weak_margins, strong_margins_tail = group_margins[:L], group_margins[L:]
     strong.append(strong_L)
     weak.extend(weak_lists)
-    overflow = jnp.maximum(overflow, of)
 
+    margins = jnp.stack([
+        jnp.stack(strong_margins + [strong_margins_tail[0]]).min(),
+        jnp.stack([root_weak_margin] + weak_margins).min(),
+        strong_margins_tail[1],     # p2p
+        strong_margins_tail[2],     # p2l
+        strong_margins_tail[3],     # m2p
+    ])
     return Connectivity(strong=tuple(strong), weak=tuple(weak),
-                        p2p=p2p, p2l=p2l, m2p=m2p, overflow=overflow)
+                        p2p=p2p, p2l=p2l, m2p=m2p,
+                        overflow=_overflow_of([margins]), margins=margins)
 
 
 def connectivity_stats(conn: Connectivity) -> dict:
@@ -243,6 +278,7 @@ def connectivity_stats(conn: Connectivity) -> dict:
     conn = jax.device_get(conn)
     strong = [np.asarray(s) for s in conn.strong]
     weak = [np.asarray(w) for w in conn.weak]
+    margins = np.asarray(conn.margins)
     return {
         "m2l_pairs": int(sum(int((w >= 0).sum()) for w in weak)),
         "p2p_pairs": int((np.asarray(conn.p2p) >= 0).sum()),
@@ -251,4 +287,5 @@ def connectivity_stats(conn: Connectivity) -> dict:
         "strong_max": max(int((s >= 0).sum(-1).max()) for s in strong),
         "weak_max": max(int((w >= 0).sum(-1).max()) for w in weak),
         "overflow": int(np.asarray(conn.overflow)),
+        "margins": {c: int(m) for c, m in zip(MARGIN_CLASSES, margins)},
     }

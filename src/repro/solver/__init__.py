@@ -9,10 +9,12 @@ dispatch, batched multi-problem evaluation, and cap autotuning.
 from .autotune import TuneResult, probe_caps, tune_caps, tune_tiles
 from .backends import (Backend, available_backends, get_backend,
                        register_backend)
-from .solver import FmmSolver
+from .guard import GuardAttempt, GuardedSolver, GuardReport
+from .solver import CacheInfo, FmmSolver, host_health, raise_unhealthy
 
 __all__ = [
-    "FmmSolver",
+    "FmmSolver", "CacheInfo", "host_health", "raise_unhealthy",
+    "GuardedSolver", "GuardReport", "GuardAttempt",
     "Backend", "available_backends", "get_backend", "register_backend",
     "TuneResult", "probe_caps", "tune_caps", "tune_tiles",
 ]

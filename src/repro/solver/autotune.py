@@ -80,7 +80,12 @@ def probe_caps(z: jax.Array, q: jax.Array, cfg: FmmConfig) -> tuple[int, dict]:
         if stats is None:
             stats = s
         else:
-            stats = {k: max(stats[k], s[k]) for k in stats}
+            # worst row per counter; the per-class margins aggregate min
+            # (fewest slots left across the batch)
+            stats = {k: ({c: min(stats[k][c], s[k][c]) for c in stats[k]}
+                         if isinstance(stats[k], dict)
+                         else max(stats[k], s[k]))
+                     for k in stats}
     return overflow, stats
 
 

@@ -37,14 +37,18 @@ from __future__ import annotations
 import copy
 import warnings
 from collections import OrderedDict
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.config import FmmConfig
-from ..core.fmm import FmmPlan, fmm_build, fmm_evaluate
+from ..core.fmm import (HEALTH_CLASSES, FmmPlan, Health, fmm_build,
+                        fmm_evaluate, health_of)
 from ..core.topology import connectivity_stats
+from ..errors import (BackendDowngradeWarning, CapOverflowError, DTypeError,
+                      NonFiniteInputError, NonFiniteOutputError, ShapeError)
 from .autotune import TuneResult, tune_caps, tune_tiles
 from .backends import Backend, get_backend
 
@@ -52,9 +56,60 @@ from .backends import Backend, get_backend
 # "auto" shares the entry of whatever backend it resolves to. Bounded:
 # per-workload tuning in a long-lived service mints fresh configs, and
 # each solver pins two compiled XLA programs. Evicted instances stay
-# usable by existing holders; only the cache forgets them.
+# usable by existing holders; only the cache forgets them — hit/miss/
+# eviction traffic is observable via ``FmmSolver.cache_info()`` (the
+# keyed-executable-cache seam of the serving roadmap item).
 _CACHE: OrderedDict = OrderedDict()
 _CACHE_MAX = 64
+_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+class CacheInfo(NamedTuple):
+    """``FmmSolver.cache_info()`` snapshot (functools.lru_cache idiom)."""
+
+    hits: int
+    misses: int
+    maxsize: int
+    currsize: int
+    evictions: int
+
+
+def host_health(health: Health) -> dict:
+    """ONE ``device_get`` of the in-graph health plane, reduced across a
+    leading batch axis if present: margins min per class, overflow max,
+    non-finite flags any. Returns plain-python values."""
+    margins, overflow, nf_in, nf_out = (np.asarray(x) for x in
+                                        jax.device_get(health))
+    if margins.ndim == 2:       # batched: worst row per class
+        margins = margins.min(axis=0)
+    return {
+        "margins": {c: int(m) for c, m in zip(HEALTH_CLASSES, margins)},
+        "overflow": int(overflow.max()),
+        "nonfinite_input": bool(nf_in.any()),
+        "nonfinite_output": bool(nf_out.any()),
+    }
+
+
+def raise_unhealthy(h: dict, cfg: FmmConfig, entry: str = "apply") -> None:
+    """Raise the typed error matching a ``host_health`` dict (no-op when
+    healthy). Order: garbage input first, then dropped interactions,
+    then non-finite output — the most actionable diagnosis wins."""
+    if h["nonfinite_input"]:
+        raise NonFiniteInputError(
+            f"{entry}: z or q contain NaN/Inf — refusing to compute on "
+            "non-finite input")
+    if h["overflow"]:
+        neg = {c: m for c, m in h["margins"].items() if m < 0}
+        raise CapOverflowError(
+            f"{entry}: connectivity caps overflow by {h['overflow']} "
+            f"(strong_cap={cfg.strong_cap}, weak_cap={cfg.weak_cap}; "
+            f"negative margins {neg}); re-tune on this workload",
+            margins=h["margins"], overflow=h["overflow"])
+    if h["nonfinite_output"]:
+        raise NonFiniteOutputError(
+            f"{entry}: phi contains NaN/Inf on finite input — kernel or "
+            "expansion fault (degrade the evaluation phase to the "
+            "reference backend, or use apply_guarded)")
 
 
 class FmmSolver:
@@ -104,8 +159,13 @@ class FmmSolver:
         self._apply = jax.jit(self._make_core(self._impls, self._topo))
         self._apply_batched = jax.jit(jax.vmap(
             self._make_core(batched_impls, batched_topo)))
-        self._batched_overflow = jax.jit(jax.vmap(
-            self._make_overflow(batched_topo)))
+        # health twins: same pipeline, plus the in-graph health plane —
+        # ONE launch serves phi AND the overflow/non-finite diagnosis,
+        # so the checked/guarded entry points never pay a second build.
+        self._apply_health = jax.jit(
+            self._make_core(self._impls, self._topo, with_health=True))
+        self._apply_batched_health = jax.jit(jax.vmap(
+            self._make_core(batched_impls, batched_topo, with_health=True)))
         self._refresh = jax.jit(self._make_build(self._topo))
         self._apply_plan = jax.jit(self._make_evaluate(self._impls))
         self.tune_result: Optional[TuneResult] = None
@@ -119,20 +179,34 @@ class FmmSolver:
         key = (cfg, get_backend(backend, cfg).name)
         solver = _CACHE.get(key)
         if solver is None:
+            _CACHE_STATS["misses"] += 1
             solver = _CACHE[key] = cls(cfg, backend)
             while len(_CACHE) > _CACHE_MAX:
                 _CACHE.popitem(last=False)
+                _CACHE_STATS["evictions"] += 1
         else:
+            _CACHE_STATS["hits"] += 1
             _CACHE.move_to_end(key)
         return solver
 
     @classmethod
     def cache_clear(cls) -> None:
         _CACHE.clear()
+        _CACHE_STATS.update(hits=0, misses=0, evictions=0)
 
     @classmethod
     def cache_size(cls) -> int:
         return len(_CACHE)
+
+    @classmethod
+    def cache_info(cls) -> CacheInfo:
+        """Hit/miss/eviction counters of the ``build`` plan cache (the
+        ``functools.lru_cache`` idiom). Ragged production traffic that
+        churns configs shows up here as eviction pressure."""
+        return CacheInfo(hits=_CACHE_STATS["hits"],
+                         misses=_CACHE_STATS["misses"],
+                         maxsize=_CACHE_MAX, currsize=len(_CACHE),
+                         evictions=_CACHE_STATS["evictions"])
 
     def _make_build(self, topo: dict):
         cfg = self.cfg
@@ -142,14 +216,6 @@ class FmmSolver:
             return fmm_build(z, q, cfg, **topo)
 
         return build
-
-    def _make_overflow(self, topo: dict):
-        cfg = self.cfg
-
-        def overflow(z: jax.Array, q: jax.Array) -> jax.Array:
-            return fmm_build(z, q, cfg, **topo).conn.overflow
-
-        return overflow
 
     def _make_evaluate(self, impls: dict):
         cfg = self.cfg
@@ -162,14 +228,17 @@ class FmmSolver:
 
         return evaluate
 
-    def _make_core(self, impls: dict, topo: dict):
+    def _make_core(self, impls: dict, topo: dict, with_health: bool = False):
         cfg = self.cfg
 
         def core(z: jax.Array, q: jax.Array) -> jax.Array:
             plan = fmm_build(z, q, cfg, **topo)
             phi_sorted = fmm_evaluate(plan, cfg, **impls)
             out = jnp.zeros_like(phi_sorted)
-            return out.at[plan.tree.perm].set(phi_sorted)
+            phi = out.at[plan.tree.perm].set(phi_sorted)
+            if with_health:
+                return phi, health_of(plan, z, q, phi)
+            return phi
 
         return core
 
@@ -181,22 +250,33 @@ class FmmSolver:
         Trusts the caps (pure jit path): an input whose interaction
         lists exceed ``strong_cap``/``weak_cap`` silently drops
         interactions. Size the caps with ``tune`` on a representative
-        sample, and use ``apply_checked`` (or monitor ``stats``) when
-        production inputs may drift from it.
+        sample, and use ``apply_checked``/``apply_guarded`` (or monitor
+        ``stats``) when production inputs may drift from it.
         """
+        self._validate(z, q, "apply")
         return self._apply(z, q)
 
+    def apply_with_health(self, z: jax.Array, q: jax.Array):
+        """``apply`` plus the in-graph health plane: ``(phi, Health)``
+        from ONE compiled launch — overflow margins per interaction-list
+        class and non-finite input/output flags ride alongside phi, so
+        checking execution health costs one ``device_get``, not a second
+        eager topology build. The guarded ladder (``repro.solver.guard``)
+        builds on this entry point."""
+        self._validate(z, q, "apply_with_health")
+        return self._apply_health(z, q)
+
     def apply_checked(self, z: jax.Array, q: jax.Array) -> jax.Array:
-        """``apply`` plus cap-overflow validation (one extra eager
-        topological build). Raises RuntimeError instead of silently
-        dropping interactions when the input exceeds the caps."""
-        stats = self.stats(z, q)
-        if stats["overflow"]:
-            raise RuntimeError(
-                f"connectivity caps overflow by {stats['overflow']} "
-                f"(strong_cap={self.cfg.strong_cap}, "
-                f"weak_cap={self.cfg.weak_cap}); re-tune on this workload")
-        return self._apply(z, q)
+        """``apply`` with execution-health validation on the same launch.
+
+        Raises the typed errors of ``repro.errors`` instead of silently
+        returning a wrong answer: ``CapOverflowError`` when interactions
+        were dropped, ``NonFiniteInputError``/``NonFiniteOutputError``
+        for NaN/Inf in, resp. out. Costs one ``device_get`` over
+        ``apply`` — the health plane is computed in-graph."""
+        phi, health = self.apply_with_health(z, q)
+        raise_unhealthy(host_health(health), self.cfg, "apply_checked")
+        return phi
 
     def apply_batched(self, z: jax.Array, q: jax.Array) -> jax.Array:
         """Evaluate B independent problems in one call.
@@ -217,6 +297,31 @@ class FmmSolver:
         batch-wide overflow guard.
         """
         self._validate_batched(z, q)
+        self._warn_batched_fallback()
+        return self._apply_batched(z, q)
+
+    def apply_batched_with_health(self, z: jax.Array, q: jax.Array):
+        """``apply_batched`` plus the per-row health plane:
+        ``(phi (B, N), Health)`` with every health field carrying a
+        leading B axis — one compiled launch, reduce with
+        ``host_health``."""
+        self._validate_batched(z, q)
+        self._warn_batched_fallback()
+        return self._apply_batched_health(z, q)
+
+    def apply_batched_checked(self, z: jax.Array, q: jax.Array) -> jax.Array:
+        """``apply_batched`` with execution-health validation across the
+        whole batch, on the same launch. Health is reduced over the B
+        problems (overflow max, margins min, non-finite any), so a
+        single unhealthy batch member raises the same typed error
+        ``apply_checked`` gives one problem — instead of silently
+        returning truncated potentials for that row."""
+        phi, health = self.apply_batched_with_health(z, q)
+        raise_unhealthy(host_health(health), self.cfg,
+                        "apply_batched_checked")
+        return phi
+
+    def _warn_batched_fallback(self) -> None:
         if (self.dispatched["apply_batched"] != self.backend.name
                 and not self._warned_batched_fallback):
             self._warned_batched_fallback = True
@@ -225,34 +330,49 @@ class FmmSolver:
                 "batched_dispatch='fallback': apply_batched dispatches "
                 f"the {self.dispatched['apply_batched']!r} sweeps instead "
                 "(same answer; do not attribute batched timings to "
-                f"{self.backend.name!r})", RuntimeWarning, stacklevel=2)
-        return self._apply_batched(z, q)
+                f"{self.backend.name!r})", BackendDowngradeWarning,
+                stacklevel=3)
 
-    def apply_batched_checked(self, z: jax.Array, q: jax.Array) -> jax.Array:
-        """``apply_batched`` plus cap-overflow validation across the
-        whole batch (one extra batched topological build). The overflow
-        scalar is max-reduced over the B problems, so a single
-        overflowing batch member raises RuntimeError — the same re-tune
-        error ``apply_checked`` gives one problem — instead of silently
-        returning truncated potentials for that row."""
-        self._validate_batched(z, q)
-        overflow = int(jax.device_get(
-            jnp.max(self._batched_overflow(z, q))))
-        if overflow:
-            raise RuntimeError(
-                f"connectivity caps overflow by {overflow} on the worst "
-                f"batch member (strong_cap={self.cfg.strong_cap}, "
-                f"weak_cap={self.cfg.weak_cap}); re-tune on this workload")
-        return self.apply_batched(z, q)
+    # -- argument validation (typed errors, repro.errors) -------------------
+
+    def _validate_dtypes(self, z, q, entry: str) -> None:
+        zd = np.dtype(getattr(z, "dtype", np.asarray(z).dtype))
+        qd = np.dtype(getattr(q, "dtype", np.asarray(q).dtype))
+        want = np.dtype(self.cfg.complex_dtype)
+        if not np.issubdtype(zd, np.complexfloating):
+            raise DTypeError(
+                f"{entry} wants complex positions z = x + iy; got real "
+                f"{zd.name} — a real-valued position array is a "
+                "complex-vs-real confusion (pass z.astype(complex))")
+        if not np.issubdtype(qd, np.complexfloating):
+            raise DTypeError(
+                f"{entry} wants complex charges q (the potential is "
+                f"complex); got {qd.name} — add 0j (q.astype(complex))")
+        if zd.itemsize < want.itemsize or qd.itemsize < want.itemsize:
+            raise DTypeError(
+                f"{entry}: {zd.name}/{qd.name} input into a "
+                f"dtype={self.cfg.dtype!r} config would silently lose the "
+                f"configured precision; cast to {want.name} (or build an "
+                "f32 config)")
+
+    def _validate(self, z, q, entry: str) -> None:
+        n = self.cfg.n
+        zs, qs = getattr(z, "shape", ()), getattr(q, "shape", ())
+        if zs != (n,) or qs != (n,):
+            raise ShapeError(
+                f"{entry} wants z and q of shape ({n},); got z{zs} q{qs}")
+        self._validate_dtypes(z, q, entry)
 
     def _validate_batched(self, z: jax.Array, q: jax.Array) -> None:
-        if z.ndim != 2:
-            raise ValueError(f"apply_batched wants (B, N); got {z.shape}")
+        if getattr(z, "ndim", 0) != 2:
+            raise ShapeError(
+                f"apply_batched wants (B, N); got {getattr(z, 'shape', ())}")
         if z.shape[-1] != self.cfg.n:
-            raise ValueError(f"N={z.shape[-1]} != cfg.n={self.cfg.n}")
+            raise ShapeError(f"N={z.shape[-1]} != cfg.n={self.cfg.n}")
         if q.shape != z.shape:
-            raise ValueError(
+            raise ShapeError(
                 f"apply_batched wants q of shape {z.shape}; got {q.shape}")
+        self._validate_dtypes(z, q, "apply_batched")
 
     def refresh(self, z: jax.Array, q: jax.Array) -> FmmPlan:
         """Rebuild tree + connectivity for moved particles — the cheap
@@ -265,10 +385,7 @@ class FmmSolver:
         Feed the plan to ``apply_plan``; check ``plan.conn.overflow``
         (one scalar) to monitor cap drift as particles move.
         """
-        if z.shape != (self.cfg.n,) or q.shape != (self.cfg.n,):
-            raise ValueError(
-                f"refresh wants z and q of shape ({self.cfg.n},); got "
-                f"z{z.shape} q{q.shape}")
+        self._validate(z, q, "refresh")
         return self._refresh(z, q)
 
     def apply_plan(self, plan: FmmPlan) -> jax.Array:
@@ -287,6 +404,15 @@ class FmmSolver:
     def stats(self, z: jax.Array, q: jax.Array) -> dict:
         """Connectivity stats (incl. ``overflow``) for one problem."""
         return connectivity_stats(self.plan(z, q).conn)
+
+    def guarded(self, **kwargs) -> "GuardedSolver":  # noqa: F821
+        """Wrap this solver's config/backend in the guarded-execution
+        recovery ladder (``repro.solver.guard.GuardedSolver``): detect
+        via the in-graph health plane, recover by cap escalation /
+        per-phase degradation / direct summation, never silently
+        corrupt. Keyword args forward to ``GuardedSolver``."""
+        from .guard import GuardedSolver  # local: guard imports solver
+        return GuardedSolver(self.cfg, self.backend_name, **kwargs)
 
     # -- autotuning ---------------------------------------------------------
 

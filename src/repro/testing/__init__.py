@@ -1,0 +1,14 @@
+"""Test-support utilities shipped with the package (not test-only:
+the CI fault-injection smoke job and operators drilling a deployment
+use them too).
+
+  faults   deterministic fault injectors that exercise every rung of
+           the guarded-execution recovery ladder (repro.solver.guard)
+"""
+from .faults import (force_cap_overflow, nan_coefficients, poison_input,
+                     truncate_interaction_lists)
+
+__all__ = [
+    "force_cap_overflow", "nan_coefficients", "poison_input",
+    "truncate_interaction_lists",
+]

@@ -1,0 +1,258 @@
+"""Deterministic fault injection for the guarded-execution ladder.
+
+Each injector forces exactly one failure mode of the failure model
+(DESIGN.md §9), so tests and the CI smoke job can drive the recovery
+ladder (``repro.solver.guard``) rung by rung instead of hoping a real
+fault shows up:
+
+  truncate_interaction_lists  connectivity silently built at caps
+                              ``drop`` smaller than the config declares
+                              (the cap-drift fault: particles moved past
+                              the tuned budget) — honest margins, so the
+                              health plane detects it and ONE cap
+                              doubling recovers
+  force_cap_overflow          connectivity clamped to absolute tiny caps
+                              at ANY declared config — cap escalation
+                              can never win, the ladder must walk
+                              through to the direct O(N^2) rung
+  nan_coefficients            a backend phase hook poisoned to emit NaN
+                              (the kernel-fault mode) — detected by the
+                              non-finite-output flag, recovered by the
+                              per-phase degradation rung
+  poison_input                NaN planted in z/q (caller-side garbage) —
+                              detected by the non-finite-input flag,
+                              *unrecoverable* by design: the ladder
+                              raises ``NonFiniteInputError`` immediately
+
+The context managers patch at the module/registry seam that the
+compiled solvers trace through, and call ``FmmSolver.cache_clear()`` on
+enter AND exit: solvers built inside the context trace the fault,
+solvers built outside never share programs with them. Build the
+``GuardedSolver`` *inside* the context — a solver compiled before entry
+keeps its healthy compiled program (jit caches the trace).
+
+Run the CI smoke walk (every injector, full ladder, interpret mode):
+
+    PYTHONPATH=src python -m repro.testing.faults
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..core import fmm as _fmm
+from ..core.topology import Connectivity
+from ..solver.backends import get_backend, register_backend
+from ..solver.solver import FmmSolver
+
+
+# ---------------------------------------------------------------------------
+# connectivity truncation (cap-overflow family)
+# ---------------------------------------------------------------------------
+
+def _truncate(lst: jax.Array, cap: int) -> jax.Array:
+    """Drop list entries beyond ``cap`` (shape stays the declared one)."""
+    if lst.shape[-1] <= cap:
+        return lst
+    return lst.at[..., cap:].set(-1)
+
+
+def _max_count(arrays) -> jax.Array:
+    """Fullest row over a group of padded lists (kept entries are >= 0)."""
+    return jnp.stack([(a >= 0).sum(-1).max() for a in arrays]).max()
+
+
+def _truncated_connectivity(conn: Connectivity, eff_strong: int,
+                            eff_weak: int) -> Connectivity:
+    """``conn`` as if it had been built at the smaller *effective* caps:
+    entries beyond them dropped, margins/overflow recomputed against
+    them — the fault is honest, exactly like a real undersized build."""
+    margins = jnp.stack([
+        eff_strong - _max_count(conn.strong),
+        eff_weak - _max_count(conn.weak),
+        eff_strong - _max_count([conn.p2p]),
+        eff_strong - _max_count([conn.p2l]),
+        eff_strong - _max_count([conn.m2p]),
+    ]).astype(jnp.int32)
+    overflow = jnp.maximum(-margins.min(), 0).astype(jnp.int32)
+    return conn._replace(
+        strong=tuple(_truncate(s, eff_strong) for s in conn.strong),
+        weak=tuple(_truncate(w, eff_weak) for w in conn.weak),
+        p2p=_truncate(conn.p2p, eff_strong),
+        p2l=_truncate(conn.p2l, eff_strong),
+        m2p=_truncate(conn.m2p, eff_strong),
+        overflow=overflow, margins=margins)
+
+
+@contextlib.contextmanager
+def _patched_connectivity(effective_caps):
+    """Patch the ``build_connectivity`` binding that ``fmm_build`` traces
+    (``repro.core.fmm``'s) with a truncating wrapper.
+    ``effective_caps(cfg) -> (strong, weak)`` picks the effective caps
+    per config, so an escalated config sees proportionally wider
+    effective lists — the fault composes with the recovery ladder."""
+    real = _fmm.build_connectivity
+
+    def faulty(tree, cfg, leaf_classify_impl=None):
+        conn = real(tree, cfg, leaf_classify_impl=leaf_classify_impl)
+        es, ew = effective_caps(cfg)
+        return _truncated_connectivity(conn, max(1, int(es)),
+                                       max(1, int(ew)))
+
+    FmmSolver.cache_clear()
+    _fmm.build_connectivity = faulty
+    try:
+        yield
+    finally:
+        _fmm.build_connectivity = real
+        FmmSolver.cache_clear()
+
+
+@contextlib.contextmanager
+def truncate_interaction_lists(drop: int = 2):
+    """Cap-drift fault: every interaction list is silently built ``drop``
+    entries short of what the config declares. A config whose margins
+    were < ``drop`` overflows; doubling the caps restores slack (the
+    effective caps scale with the declared ones), so the guard's cap-
+    escalation rung recovers without degrading the backend."""
+    with _patched_connectivity(
+            lambda cfg: (cfg.strong_cap - drop, cfg.weak_cap - drop)):
+        yield
+
+
+@contextlib.contextmanager
+def force_cap_overflow(strong: int = 1, weak: int = 1):
+    """Unrecoverable-by-escalation overflow: effective caps clamped to
+    tiny absolute values no matter what the config declares. Every cap
+    doubling still overflows, so the ladder must fall through to the
+    direct O(N^2) rung — the walk the acceptance gate measures."""
+    with _patched_connectivity(
+            lambda cfg: (min(strong, cfg.strong_cap),
+                         min(weak, cfg.weak_cap))):
+        yield
+
+
+# ---------------------------------------------------------------------------
+# kernel fault (non-finite output family)
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def nan_coefficients(backend: str = "pallas", phase: str = "eval_fused"):
+    """Kernel fault: re-register ``backend`` with its ``phase`` hook
+    wrapped to multiply its output by NaN — deterministic non-finite
+    coefficients/potentials from one compute phase, finite input. The
+    health plane flags ``nonfinite_output``; the guard's per-phase
+    degradation rung (reference sweeps for the poisoned phase) recovers.
+    """
+    be = get_backend(backend)
+    hook = getattr(be, phase)
+    if hook is None:
+        raise ValueError(
+            f"backend {backend!r} has no {phase!r} hook to poison "
+            "(already the reference path?)")
+
+    def poisoned(*args, **kwargs):
+        out = hook(*args, **kwargs)
+        return jax.tree_util.tree_map(lambda a: a * jnp.nan, out)
+
+    FmmSolver.cache_clear()
+    register_backend(dataclasses.replace(be, **{phase: poisoned}))
+    try:
+        yield
+    finally:
+        register_backend(be)
+        FmmSolver.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# input fault (non-finite input family)
+# ---------------------------------------------------------------------------
+
+def poison_input(arr: jax.Array, idx: int = 0) -> jax.Array:
+    """Plant a NaN at ``arr[..., idx]`` — caller-side garbage input. The
+    guard refuses it (``NonFiniteInputError``): no recovery rung can
+    repair an input that carries no information."""
+    return jnp.asarray(arr).at[..., idx].set(jnp.nan)
+
+
+# ---------------------------------------------------------------------------
+# CI smoke walk: every injector drives its rung of the ladder
+# ---------------------------------------------------------------------------
+
+def _smoke() -> int:     # pragma: no cover - exercised as a CI job
+    import numpy as np
+
+    jax.config.update("jax_enable_x64", True)   # f64 parity vs the oracle
+
+    from ..core.config import FmmConfig
+    from ..core.direct import direct_potential
+    from ..data.synthetic import particles
+    from ..errors import NonFiniteInputError
+    from ..solver.guard import GuardedSolver
+
+    cfg = FmmConfig(n=256, nlevels=2, p=12, dtype="f64",
+                    strong_cap=32, weak_cap=64)
+    z, q = particles("normal", cfg.n, 3)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+    oracle = np.asarray(direct_potential(z, z, q, kernel=cfg.kernel))
+    scale = np.abs(oracle).max()
+    failures = []
+
+    def check(name, report, phi, expect_rung, tol):
+        err = np.abs(np.asarray(phi) - oracle).max() / scale
+        line = (f"  {name:<28s} {report.summary()}  rel_err={err:.2e}")
+        ok = report.ok and expect_rung in [a.rung for a in report.attempts]
+        ok = ok and err < tol
+        print(("ok " if ok else "FAIL ") + line)
+        if not ok:
+            failures.append(name)
+
+    print("fault-injection smoke: walking the recovery ladder")
+
+    # rung 0: healthy primary — no retries, phi at FMM accuracy
+    g = GuardedSolver(cfg, "reference", max_cap_doublings=2)
+    phi, rep = g.apply_guarded(z, q)
+    check("healthy", rep, phi, "primary", 1e-6)
+    assert rep.retries == 0, rep.summary()
+
+    # rung 1: cap drift -> one doubling recovers on the fast path; the
+    # margins are per-class, so only the overflowed strong family grows
+    with truncate_interaction_lists(drop=20):
+        g = GuardedSolver(cfg, "reference", max_cap_doublings=2)
+        phi, rep = g.apply_guarded(z, q)
+        check("truncate->caps*2", rep, phi,
+              f"caps*{2 * cfg.strong_cap}/{cfg.weak_cap}", 1e-6)
+        assert rep.degradations == (), rep.summary()
+
+    # rung 2: poisoned kernel -> per-phase degradation recovers
+    with nan_coefficients("pallas", "eval_fused"):
+        g = GuardedSolver(cfg, "pallas", max_cap_doublings=2)
+        phi, rep = g.apply_guarded(z, q)
+        check("nan-kernel->degrade", rep, phi, "degrade:pallas+ref-eval",
+              1e-6)
+
+    # rung 3: overflow at any caps -> the direct O(N^2) last resort,
+    # exact parity with the oracle
+    with force_cap_overflow(strong=1, weak=1):
+        g = GuardedSolver(cfg, "reference", max_cap_doublings=1)
+        phi, rep = g.apply_guarded(z, q)
+        check("forced-overflow->direct", rep, phi, "direct", 1e-10)
+
+    # garbage input: typed refusal, not a recovery attempt
+    g = GuardedSolver(cfg, "reference")
+    try:
+        g.apply_guarded(poison_input(z), q)
+        print("FAIL  nan-input did not raise")
+        failures.append("nan-input")
+    except NonFiniteInputError:
+        print("ok    nan-input -> NonFiniteInputError (unrecoverable)")
+
+    print("smoke:", "FAILED " + ",".join(failures) if failures else "all ok")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":     # pragma: no cover
+    raise SystemExit(_smoke())

@@ -141,8 +141,9 @@ def test_apply_batched_checked_raises_when_any_member_overflows():
     tiny = dataclasses.replace(cfg, strong_cap=2, weak_cap=2)
     zb, qb = _batch(2, cfg.n)
     solver = FmmSolver.build(tiny, "reference")
-    assert int(jax.device_get(
-        jnp.max(solver._batched_overflow(zb, qb)))) > 0
+    from repro.solver import host_health
+    _, health = solver.apply_batched_with_health(zb, qb)
+    assert host_health(health)["overflow"] > 0
     with pytest.raises(RuntimeError, match="overflow"):
         solver.apply_batched_checked(zb, qb)
     # ...while an in-cap batch returns the plain batched answer

@@ -1,0 +1,134 @@
+"""Property-based degenerate-input tests (robustness satellite).
+
+Every degenerate layout must end in one of two honest outcomes:
+direct-oracle parity, or a *typed* error from ``repro.errors`` — never a
+silent NaN/Inf and never a silently truncated phi. Coincident points are
+the interesting case: the FMM's P2P excludes self-interaction by
+particle identity, so coincident *distinct* particles divide by zero —
+the health plane flags it and the guard's capless direct rung (which
+excludes by ``x_j != y_i``, eq. (1.2)) recovers exact answers.
+
+Uses ``tests/_hypothesis_fallback``: real property tests with hypothesis
+installed, a fixed-seed deterministic sampler without it.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+from repro.core import FmmConfig, direct_potential_numpy
+from repro.data.synthetic import particles
+from repro.errors import FmmError
+from repro.solver import GuardedSolver
+
+CFG = FmmConfig(n=256, nlevels=2, p=12, dtype="f64",
+                strong_cap=32, weak_cap=64)
+
+
+def _guarded():
+    return GuardedSolver(CFG, "reference", max_cap_doublings=2)
+
+
+def _run(z, q):
+    """(phi, report) or a typed FmmError — anything else is a bug."""
+    z, q = jnp.asarray(z, jnp.complex128), jnp.asarray(q, jnp.complex128)
+    try:
+        phi, rep = _guarded().apply_guarded(z, q)
+    except FmmError:
+        return None, None
+    assert np.isfinite(np.asarray(phi)).all(), \
+        "guarded phi must never carry silent NaN/Inf"
+    return np.asarray(phi), rep
+
+
+def _oracle(z, q):
+    return direct_potential_numpy(z, z, np.asarray(q, np.complex128),
+                                  kernel=CFG.kernel)
+
+
+def _check_parity(z, q, tol):
+    phi, rep = _run(z, q)
+    if phi is None:          # typed refusal is an allowed honest outcome
+        return
+    ref = _oracle(z, q)
+    scale = max(np.abs(ref).max(), 1e-12)
+    assert np.abs(phi - ref).max() / scale < tol, rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# coincident particles: non-finite FMM, exact direct recovery
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.floats(0.05, 0.95), st.floats(0.05, 0.95))
+def test_all_coincident_points_recover_exactly(x, y):
+    z = np.full(CFG.n, x + 1j * y, np.complex128)
+    q = np.ones(CFG.n, np.complex128)
+    phi, rep = _run(z, q)
+    assert phi is not None, "coincident input is recoverable via direct"
+    assert rep.final_rung == "direct", rep.summary()
+    # the oracle excludes every coincident pair: phi is exactly zero
+    np.testing.assert_array_equal(phi, np.zeros(CFG.n, np.complex128))
+
+
+def test_one_distinct_particle_amid_a_coincident_cluster():
+    z = np.full(CFG.n, 0.25 + 0.25j, np.complex128)
+    z[0] = 0.75 + 0.75j
+    q = np.ones(CFG.n, np.complex128)
+    _check_parity(z, q, 1e-10)      # direct rung: exact parity
+
+
+# ---------------------------------------------------------------------------
+# collinear / clustered layouts: healthy FMM at oracle accuracy
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 1000), st.floats(0.1, 0.9))
+def test_collinear_points(seed, height):
+    rng = np.random.default_rng(seed)
+    z = rng.uniform(0, 1, CFG.n) + 1j * height    # one horizontal line
+    q = rng.normal(size=CFG.n) + 0j
+    _check_parity(z, q, 1e-5)
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 1000))
+def test_empty_quadrants(seed):
+    """Everything crowded into one corner: 3/4 of the boxes are empty,
+    the adaptive lists must still cover every pair."""
+    rng = np.random.default_rng(seed)
+    z = (rng.uniform(0, 0.25, CFG.n) + 1j * rng.uniform(0, 0.25, CFG.n))
+    q = rng.normal(size=CFG.n) + 0j
+    _check_parity(z, q, 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# extreme coordinate scales
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(st.floats(-9.0, 6.0))
+def test_extreme_scales(log10_scale):
+    """The tree normalizes to the data's own bounding box, so a layout
+    spanning 1e-9..1e6 in absolute size must keep oracle parity."""
+    scale = 10.0 ** log10_scale
+    z, q = particles("uniform", CFG.n, 42)
+    z = np.asarray(z, np.complex128) * scale
+    _check_parity(z, np.asarray(q, np.complex128), 1e-5)
+
+
+def test_single_particle_like_input_never_nan():
+    """n-1 charges zeroed: numerically a one-particle problem."""
+    z, q = particles("uniform", CFG.n, 7)
+    q = np.zeros(CFG.n, np.complex128)
+    phi, rep = _run(np.asarray(z, np.complex128), q)
+    assert phi is not None
+    np.testing.assert_allclose(phi, np.zeros(CFG.n), atol=1e-14)
+
+
+def test_guard_rejects_nonsense_shapes_with_typed_errors():
+    from repro.errors import ShapeError
+    g = _guarded()
+    z, q = particles("uniform", CFG.n, 1)
+    with pytest.raises(ShapeError):
+        g.apply_guarded(jnp.asarray(z)[:-1], jnp.asarray(q))

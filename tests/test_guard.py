@@ -1,0 +1,249 @@
+"""Guarded execution: the in-graph health plane, the recovery ladder
+(cap escalation -> per-phase degradation -> direct), and the typed
+error taxonomy — driven rung by rung by the fault injectors of
+``repro.testing.faults``."""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import FmmConfig, direct_potential
+from repro.data.synthetic import particles
+from repro.errors import (CapOverflowError, FmmError, NonFiniteInputError,
+                          NonFiniteOutputError, RecoveryExhaustedError)
+from repro.solver import FmmSolver, GuardedSolver, GuardReport
+from repro.solver.guard import grow_caps
+from repro.testing import (force_cap_overflow, nan_coefficients,
+                           poison_input, truncate_interaction_lists)
+
+CFG = FmmConfig(n=256, nlevels=2, p=12, dtype="f64",
+                strong_cap=32, weak_cap=64)
+
+
+def _problem(seed=3, dist="normal"):
+    z, q = particles(dist, CFG.n, seed)
+    return jnp.asarray(z), jnp.asarray(q)
+
+
+def _oracle(z, q):
+    return np.asarray(direct_potential(z, z, q, kernel=CFG.kernel))
+
+
+# ---------------------------------------------------------------------------
+# rung 0: healthy steady state
+# ---------------------------------------------------------------------------
+
+def test_guard_healthy_passthrough():
+    """On a healthy input the guard is the plain apply plus one host
+    read: same phi, no retries, no degradations."""
+    z, q = _problem()
+    g = GuardedSolver(CFG, "reference")
+    phi, rep = g.apply_guarded(z, q)
+    np.testing.assert_array_equal(
+        np.asarray(phi),
+        np.asarray(FmmSolver.build(CFG, "reference").apply(z, q)))
+    assert isinstance(rep, GuardReport)
+    assert rep.ok and rep.retries == 0 and rep.degradations == ()
+    assert rep.final_rung == "primary"
+    assert rep.margins["strong"] >= 0
+    assert "primary" in rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# rung 1: cap overflow -> targeted cap escalation, solver promotion
+# ---------------------------------------------------------------------------
+
+def test_guard_recovers_from_truncated_lists_by_cap_doubling():
+    """The cap-drift fault (lists silently short) is detected by the
+    margins and recovered by doubling exactly the overflowed cap
+    family; the escalated solver is promoted for subsequent steps."""
+    z, q = _problem()
+    ref = np.asarray(FmmSolver.build(CFG, "reference").apply(z, q))
+    with truncate_interaction_lists(drop=20):   # strong margin is 16
+        g = GuardedSolver(CFG, "reference", max_cap_doublings=2)
+        phi, rep = g.apply_guarded(z, q)
+        assert rep.ok and rep.retries == 1 and rep.degradations == ()
+        assert rep.attempts[0].rung == "primary"
+        assert not rep.attempts[0].ok
+        assert rep.attempts[0].overflow > 0
+        # targeted: only the strong family overflowed, weak kept its cap
+        assert g.cfg.strong_cap == 2 * CFG.strong_cap
+        assert g.cfg.weak_cap == CFG.weak_cap
+        # the promoted solver keeps serving healthily on the fast path
+        phi2, rep2 = g.apply_guarded(z, q)
+        assert rep2.retries == 0 and rep2.final_rung == "primary"
+    scale = np.abs(ref).max()
+    assert np.abs(np.asarray(phi) - ref).max() / scale < 1e-12
+    assert np.abs(np.asarray(phi2) - ref).max() / scale < 1e-12
+
+
+def test_grow_caps_targets_negative_margins():
+    grown = grow_caps(CFG, {"strong": -2, "weak": 5,
+                            "p2p": 1, "p2l": 1, "m2p": 1})
+    assert grown.strong_cap == 2 * CFG.strong_cap
+    assert grown.weak_cap == CFG.weak_cap
+    grown = grow_caps(CFG, {"strong": 3, "weak": -1,
+                            "p2p": 1, "p2l": 1, "m2p": 1})
+    assert grown.strong_cap == CFG.strong_cap
+    assert grown.weak_cap == 2 * CFG.weak_cap
+    # no margins: both double, weak clamped to the structural 4S bound
+    grown = grow_caps(dataclasses.replace(CFG, weak_cap=8 * CFG.strong_cap))
+    assert grown.weak_cap == 4 * grown.strong_cap
+
+
+# ---------------------------------------------------------------------------
+# rung 3: unrecoverable overflow -> direct oracle parity (acceptance gate)
+# ---------------------------------------------------------------------------
+
+def test_guard_walks_to_direct_under_forced_overflow():
+    """Acceptance: under injected cap overflow that no escalation can
+    fix, apply_guarded falls through to the O(N^2) rung and returns
+    direct-oracle parity (<= 1e-10, f64), with the report recording
+    the whole path."""
+    z, q = _problem()
+    oracle = _oracle(z, q)
+    with force_cap_overflow(strong=1, weak=1):
+        g = GuardedSolver(CFG, "reference", max_cap_doublings=1)
+        phi, rep = g.apply_guarded(z, q)
+    assert rep.ok and rep.final_rung == "direct"
+    assert rep.final_backend == "direct"
+    rungs = [a.rung for a in rep.attempts]
+    assert rungs[0] == "primary" and rungs[-1] == "direct"
+    assert any(r.startswith("caps*") for r in rungs)   # escalation tried
+    assert "direct" in rep.degradations
+    scale = np.abs(oracle).max()
+    assert np.abs(np.asarray(phi) - oracle).max() / scale <= 1e-10
+
+
+def test_guard_exhaustion_raises_typed_error_with_report():
+    z, q = _problem()
+    with force_cap_overflow(strong=1, weak=1):
+        g = GuardedSolver(CFG, "reference", max_cap_doublings=1,
+                          direct=False)
+        with pytest.raises(RecoveryExhaustedError) as ei:
+            g.apply_guarded(z, q)
+    rep = ei.value.report
+    assert isinstance(rep, GuardReport) and not rep.ok
+    assert rep.attempts[-1].overflow > 0
+    assert isinstance(ei.value, FmmError)   # taxonomy root
+
+
+# ---------------------------------------------------------------------------
+# rung 2: kernel fault -> per-phase degradation
+# ---------------------------------------------------------------------------
+
+def test_guard_degrades_poisoned_kernel_phase():
+    """A NaN-emitting evaluation kernel (finite input!) is flagged by
+    nonfinite_output and recovered by dropping only the evaluation-phase
+    hooks to the reference sweeps — caps, topology and M2L keep their
+    backend."""
+    z, q = _problem()
+    ref = np.asarray(FmmSolver.build(CFG, "reference").apply(z, q))
+    with nan_coefficients("pallas", "eval_fused"):
+        g = GuardedSolver(CFG, "pallas")
+        phi, rep = g.apply_guarded(z, q)
+    assert rep.ok
+    assert rep.attempts[0].nonfinite_output and not rep.attempts[0].ok
+    assert rep.final_rung == "degrade:pallas+ref-eval"
+    assert rep.degradations == ("degrade:pallas+ref-eval",)
+    scale = np.abs(ref).max()
+    assert np.abs(np.asarray(phi) - ref).max() / scale < 1e-10
+
+
+def test_apply_checked_raises_nonfinite_output_typed():
+    z, q = _problem()
+    with nan_coefficients("pallas", "eval_fused"):
+        solver = FmmSolver.build(CFG, "pallas")
+        with pytest.raises(NonFiniteOutputError, match="kernel"):
+            solver.apply_checked(z, q)
+
+
+# ---------------------------------------------------------------------------
+# garbage input: typed refusal, never a recovery walk
+# ---------------------------------------------------------------------------
+
+def test_guard_refuses_nonfinite_input():
+    z, q = _problem()
+    g = GuardedSolver(CFG, "reference")
+    with pytest.raises(NonFiniteInputError, match="NaN"):
+        g.apply_guarded(poison_input(z), q)
+    with pytest.raises(NonFiniteInputError):
+        g.apply_guarded(z, poison_input(q))
+
+
+def test_apply_checked_overflow_error_carries_margins():
+    tiny = dataclasses.replace(CFG, strong_cap=2, weak_cap=2)
+    z, q = _problem(5)
+    with pytest.raises(CapOverflowError) as ei:
+        FmmSolver.build(tiny, "reference").apply_checked(z, q)
+    assert ei.value.overflow > 0
+    assert min(ei.value.margins.values()) < 0
+    assert isinstance(ei.value, RuntimeError)   # legacy except-clauses
+
+
+# ---------------------------------------------------------------------------
+# batched guarded entry
+# ---------------------------------------------------------------------------
+
+def test_apply_batched_guarded_escalates_whole_batch():
+    zs, qs = zip(*(particles("normal", CFG.n, s) for s in (0, 1)))
+    zb = jnp.stack([jnp.asarray(z) for z in zs])
+    qb = jnp.stack([jnp.asarray(q) for q in qs])
+    ref = np.asarray(FmmSolver.build(CFG, "reference").apply_batched(zb, qb))
+    with truncate_interaction_lists(drop=20):
+        g = GuardedSolver(CFG, "reference", max_cap_doublings=2)
+        phi, rep = g.apply_batched_guarded(zb, qb)
+        assert rep.ok and rep.entry == "apply_batched"
+        assert rep.retries >= 1
+        assert g.cfg.strong_cap > CFG.strong_cap   # batch-wide promotion
+    scale = np.abs(ref).max()
+    assert np.abs(np.asarray(phi) - ref).max() / scale < 1e-12
+
+
+# ---------------------------------------------------------------------------
+# refresh_guarded: the time-stepping re-planning loop
+# ---------------------------------------------------------------------------
+
+def test_refresh_guarded_replans_on_cap_drift():
+    """A drifted plan (overflowing caps) re-plans through escalation and
+    promotes the solver: the next refresh is primary-healthy, and
+    refresh+apply_plan matches the plain apply of the promoted config."""
+    z, q = _problem(7)
+    tight = dataclasses.replace(CFG, strong_cap=4, weak_cap=0)
+    g = GuardedSolver(tight, "reference", max_cap_doublings=4)
+    plan, rep = g.refresh_guarded(z, q)
+    assert rep.ok and rep.retries >= 1
+    assert int(plan.conn.overflow) == 0
+    assert g.cfg.strong_cap > tight.strong_cap
+    phi = g.apply_plan(plan)
+    ref = FmmSolver.build(g.cfg, "reference").apply(z, q)
+    np.testing.assert_allclose(np.asarray(phi), np.asarray(ref),
+                               rtol=1e-12, atol=1e-12)
+    # promoted: steady state is back to one attempt
+    _, rep2 = g.refresh_guarded(z, q)
+    assert rep2.retries == 0 and rep2.final_rung == "primary"
+
+
+def test_refresh_guarded_exhaustion_raises_cap_overflow():
+    z, q = _problem(7)
+    with force_cap_overflow(strong=1, weak=1):
+        g = GuardedSolver(CFG, "reference", max_cap_doublings=1)
+        with pytest.raises(CapOverflowError, match="doubling"):
+            g.refresh_guarded(z, q)
+
+
+# ---------------------------------------------------------------------------
+# ladder warm-up
+# ---------------------------------------------------------------------------
+
+def test_precompile_warms_the_plan_lattice():
+    z, q = _problem()
+    small = dataclasses.replace(CFG, p=6)
+    g = GuardedSolver(small, "reference", max_cap_doublings=1)
+    warmed = g.precompile(z, q)
+    assert len(warmed) >= 2                      # primary + one doubling
+    assert any("reference@" in w for w in warmed)
+    hits_before = FmmSolver.cache_info().hits
+    g.apply_guarded(z, q)                        # served from the lattice
+    assert FmmSolver.cache_info().hits >= hits_before

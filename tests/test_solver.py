@@ -370,3 +370,71 @@ def dataclasses_replace_caps(cfg, **kw):
     import dataclasses
     kw.setdefault("weak_cap", 0)
     return dataclasses.replace(cfg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# argument validation: typed errors on the unbatched entry points
+# ---------------------------------------------------------------------------
+
+def test_apply_rejects_real_positions_with_typed_error():
+    from repro.errors import DTypeError, ValidationError
+    solver = FmmSolver.build(CFG64, "reference")
+    z, q = particles("uniform", CFG64.n, 2)
+    with pytest.raises(DTypeError, match="complex-vs-real"):
+        solver.apply(jnp.real(jnp.asarray(z)), jnp.asarray(q))
+    with pytest.raises(DTypeError, match="complex"):
+        solver.apply(jnp.asarray(z), jnp.real(jnp.asarray(q)))
+    # the taxonomy keeps legacy except-clauses working
+    assert issubclass(DTypeError, (TypeError, ValidationError, ValueError))
+
+
+def test_apply_rejects_narrower_dtype_than_config():
+    from repro.errors import DTypeError
+    solver = FmmSolver.build(CFG64, "reference")   # f64 config
+    z, q = particles("uniform", CFG64.n, 2)
+    z32 = jnp.asarray(np.asarray(z), jnp.complex64)
+    q32 = jnp.asarray(np.asarray(q), jnp.complex64)
+    with pytest.raises(DTypeError, match="precision"):
+        solver.apply(z32, q32)
+    # ...but higher-precision input into an f32 config is fine (it is
+    # what the x64-enabled test suite does everywhere)
+    f32 = FmmConfig(n=256, nlevels=2, p=6, dtype="f32")
+    assert FmmSolver.build(f32, "reference").apply(
+        jnp.asarray(z), jnp.asarray(q)).shape == (f32.n,)
+
+
+def test_apply_and_refresh_reject_mismatched_lengths():
+    from repro.errors import ShapeError
+    solver = FmmSolver.build(CFG64, "reference")
+    z, q = particles("uniform", CFG64.n, 2)
+    with pytest.raises(ShapeError, match="apply wants"):
+        solver.apply(jnp.asarray(z), jnp.asarray(q)[:-3])
+    with pytest.raises(ShapeError, match="refresh wants"):
+        solver.refresh(jnp.asarray(z)[None], jnp.asarray(q)[None])
+
+
+# ---------------------------------------------------------------------------
+# bounded plan cache: LRU eviction + observability
+# ---------------------------------------------------------------------------
+
+def test_cache_info_counts_hits_misses_and_evictions(monkeypatch):
+    import dataclasses
+    from repro.solver import solver as solver_mod
+    FmmSolver.cache_clear()
+    monkeypatch.setattr(solver_mod, "_CACHE_MAX", 2)
+    cfgs = [dataclasses.replace(CFG64, p=p) for p in (3, 4, 5)]
+    a = FmmSolver.build(cfgs[0], "reference")
+    assert FmmSolver.build(cfgs[0], "reference") is a          # hit
+    FmmSolver.build(cfgs[1], "reference")
+    FmmSolver.build(cfgs[2], "reference")                      # evicts a
+    info = FmmSolver.cache_info()
+    assert info.hits == 1 and info.misses == 3
+    assert info.evictions == 1 and info.currsize == 2 == info.maxsize
+    # the evicted solver re-builds as a fresh instance (old one stays
+    # usable by existing holders)
+    assert FmmSolver.build(cfgs[0], "reference") is not a
+    assert FmmSolver.cache_info().misses == 4
+    FmmSolver.cache_clear()
+    zeroed = FmmSolver.cache_info()
+    assert (zeroed.hits, zeroed.misses, zeroed.evictions,
+            zeroed.currsize) == (0, 0, 0, 0)
