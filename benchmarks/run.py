@@ -38,7 +38,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (accuracy, batched, fig5_2, fig5_3, fig5_5, fig5_8,
-                   fmm_phases, guarded, kernel_tiles, table5_1, timestep)
+                   fmm_phases, guarded, kernel_tiles, serving, table5_1,
+                   timestep)
 
     quick_kwargs = {
         "table5_1": {"n": 45 * 256},
@@ -52,6 +53,7 @@ def main() -> None:
         "timestep": {"n": 2048, "steps": 3},
         "kernel_tiles": {"n": 1024, "repeats": 1},
         "guarded": {"n": 2048, "repeats": 2},
+        "serving": {"n": 512, "num": 10, "median_n": 48},
     }
     benches = {
         "table5_1": table5_1.run,
@@ -65,6 +67,7 @@ def main() -> None:
         "timestep": timestep.run,
         "kernel_tiles": kernel_tiles.run,
         "guarded": guarded.run,
+        "serving": serving.run,
     }
     names = args.only or list(benches)
     print("name,us_per_call,derived")

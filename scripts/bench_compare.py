@@ -4,8 +4,9 @@
         [--threshold 0.25] [--min-us 200] [--relative] [--all]
 
 Fails (exit 1) when any *phase timing* row — ``table5_1/*``,
-``fmm_phases/*`` and the batched-serving ``batched/*`` entries —
-regresses by more than ``--threshold`` (default 25%)
+``fmm_phases/*``, the batched-serving ``batched/*``/``serving/*`` and
+the ``guarded/*`` entries — regresses by more than ``--threshold``
+(default 25%)
 relative to the baseline. Rows below ``--min-us`` in the baseline are
 skipped (timer noise dominates there), as are rows present in only one
 record (phases legitimately appear/disappear when backends change —
@@ -32,7 +33,8 @@ import argparse
 import json
 import statistics
 
-PHASE_PREFIXES = ("table5_1/", "fmm_phases/", "batched/", "guarded/")
+PHASE_PREFIXES = ("table5_1/", "fmm_phases/", "batched/", "guarded/",
+                  "serving/")
 
 
 def _rows(record: dict) -> dict[str, float]:

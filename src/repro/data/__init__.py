@@ -1,3 +1,5 @@
-from .synthetic import DataConfig, Prefetcher, lm_batch, particles
+from .synthetic import (DataConfig, Prefetcher, lm_batch, particles,
+                        ragged_requests)
 
-__all__ = ["DataConfig", "Prefetcher", "lm_batch", "particles"]
+__all__ = ["DataConfig", "Prefetcher", "lm_batch", "particles",
+           "ragged_requests"]

@@ -73,6 +73,54 @@ def particles(dist: str, n: int, seed: int = 0):
     return jnp.asarray(z), jnp.asarray(q + 0j)
 
 
+def ragged_requests(num: int, *, seed: int = 0, median_n: int = 256,
+                    sigma: float = 0.8, n_min: int = 4,
+                    n_max: int | None = None, poison_rate: float = 0.0,
+                    dist: str = "uniform"):
+    """Synthetic ragged serving workload: ``num`` requests whose sizes
+    follow a log-normal distribution (the classic heavy-tailed traffic
+    shape), with a configurable fraction of *poison* requests.
+
+    Yields ``(n, z, q, kind)`` tuples, deterministic per ``(seed, i)``
+    (stateless, like every stream in this module — any consumer can
+    regenerate any request). ``kind`` is ``"ok"`` or the poison flavor:
+
+      "nan-q"     one charge is NaN (non-finite input)
+      "inf-z"     one position is Inf
+      "real-z"    positions handed over as a real array (dtype confusion)
+      "empty"     zero-length arrays
+
+    Shared by the serving soak (``repro.testing.serve_faults``), the
+    serving benchmark (``benchmarks/serving.py``) and the serve tests so
+    all three exercise the *same* traffic distribution.
+    """
+    if not 0.0 <= poison_rate <= 1.0:
+        raise ValueError(f"poison_rate must be in [0, 1]; got {poison_rate}")
+    poisons = ("nan-q", "inf-z", "real-z", "empty")
+    for i in range(num):
+        rng = np.random.default_rng(np.random.PCG64((seed, i)))
+        n = int(np.clip(np.round(rng.lognormal(np.log(median_n), sigma)),
+                        n_min, n_max if n_max is not None else np.inf))
+        z, q = particles(dist, n, seed=int(rng.integers(1 << 30)))
+        z = np.asarray(z)
+        q = np.asarray(q)
+        kind = "ok"
+        if poison_rate and rng.uniform() < poison_rate:
+            kind = poisons[int(rng.integers(len(poisons)))]
+            if kind == "nan-q":
+                q = q.copy()
+                q[int(rng.integers(n))] = np.nan
+            elif kind == "inf-z":
+                z = z.copy()
+                z[int(rng.integers(n))] = np.inf + 0j
+            elif kind == "real-z":
+                z = z.real.copy()
+            elif kind == "empty":
+                z = z[:0]
+                q = q[:0]
+        yield n, z, q, kind
+
+
 class Prefetcher:
     """Background-thread batch prefetch (depth-k queue)."""
 

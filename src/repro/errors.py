@@ -74,6 +74,20 @@ class RecoveryExhaustedError(FmmError, RuntimeError):
         self.report = report
 
 
+class DeadlineExceededError(FmmError, TimeoutError):
+    """A served request's deadline budget ran out before it could be
+    dispatched (admission control, ``repro.serve``). The request was
+    shed, not computed — retrying with a fresh budget is the caller's
+    call."""
+
+
+class OversizedRequestError(ValidationError):
+    """A served request's N exceeds the bucket lattice *and* the direct
+    O(N^2) fallback bound — no shape class can absorb it. Raised (or
+    recorded as the typed rejection in a ``ServeReport``) by the
+    serving plane's admission controller."""
+
+
 class BackendDowngradeWarning(RuntimeWarning):
     """A solver entry point silently dispatches a different backend than
     requested (e.g. ``apply_batched`` on a ``batched_dispatch="fallback"``

@@ -18,6 +18,12 @@ class StragglerMonitor:
     At cluster scale the same EWMA/median logic runs per worker and feeds
     the coordinator's slow-node eviction; here it logs slow steps (compile
     steps are excluded via warmup) so stalls are visible in the step log.
+
+    The FMM serving plane (``repro.serve.plane.ServePlane``) wires one of
+    these around every guarded batched dispatch as its slow-request
+    detector: a dispatch beyond ``threshold``x the rolling median flags
+    ``slow=True`` on every ``ServeReport`` in that batch (drilled by the
+    ``latency_spike`` injector in ``repro.testing.serve_faults``).
     """
 
     def __init__(self, window: int = 50, threshold: float = 2.5,

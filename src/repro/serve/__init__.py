@@ -1,0 +1,26 @@
+"""Ragged-traffic serving plane (DESIGN.md §10).
+
+Routes heterogeneous (z, q) request streams onto the compiled batched
+pipeline: shape bucketing with exact zero-charge padding, a keyed
+guarded-executable cache with warm-up and per-bucket counters, and an
+admission + degradation controller that turns every fault into either a
+recovery or a typed rejection in a structured ``ServeReport``.
+"""
+from .buckets import BucketLattice, pad_problem, unpad
+from .cache import BucketCacheStats, PlanCache, default_cfg_factory
+from .plane import (Request, ServePlane, ServeReport, ServeResult,
+                    STATUSES)
+
+__all__ = [
+    "BucketLattice",
+    "pad_problem",
+    "unpad",
+    "BucketCacheStats",
+    "PlanCache",
+    "default_cfg_factory",
+    "Request",
+    "ServePlane",
+    "ServeReport",
+    "ServeResult",
+    "STATUSES",
+]

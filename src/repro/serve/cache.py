@@ -1,0 +1,148 @@
+"""Keyed executable cache for the serving plane.
+
+``FmmSolver.build`` already memoizes compiled solvers per
+``(FmmConfig, backend)`` in a bounded LRU. Serving adds two more key
+axes that change the compiled program: the **bucket** (padded problem
+size — ``FmmConfig.n`` is a static shape) and the **batch width** B
+(``apply_batched`` compiles per (B, N)). This module extends the solver
+LRU upward into a ``(config, bucket, batch, backend)``-keyed cache of
+*guarded* executables:
+
+  - each entry is a ``GuardedSolver`` pinned to one (bucket, B) shape
+    class — it persists across requests, so cap escalations learned
+    from traffic (guard promotion) stick to the shape class;
+  - ``warm`` precompiles an entry ahead of traffic (the batched health
+    twin — the program every guarded dispatch runs);
+  - eviction is LRU with per-bucket hit/miss/eviction counters
+    (``info``), the serving analogue of ``FmmSolver.cache_info()``; an
+    evicted entry's underlying compiled programs are released when the
+    solver-level LRU drops them (``FmmSolver`` eviction now clears its
+    jitted entry points, health twins included).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import numpy as np
+
+from ..core.config import FmmConfig
+from ..solver.guard import GuardedSolver
+
+
+class BucketCacheStats(NamedTuple):
+    """Per-bucket hit/miss/eviction counters of the serving cache."""
+
+    hits: int
+    misses: int
+    evictions: int
+
+
+def default_cfg_factory(n: int, *, p: int = 17, dtype: str = "f32",
+                        strong_cap: int = 48,
+                        weak_cap: int = 128) -> FmmConfig:
+    """Bucket size -> ``FmmConfig`` (paper calibration: eq. (5.2) depth)."""
+    from ..configs.fmm2d import fmm_config
+
+    cfg = fmm_config(n, p=p, dtype=dtype)
+    return dataclasses.replace(cfg, strong_cap=strong_cap,
+                               weak_cap=weak_cap)
+
+
+class PlanCache:
+    """LRU of guarded executables keyed by (bucket, batch, backend).
+
+    ``get`` returns ``(guarded_solver, hit)``; ``warm`` precompiles the
+    entry's batched health twin on synthetic data so the first real
+    request pays a cache hit, not a compile.
+    """
+
+    def __init__(self, cfg_factory: Callable[[int], FmmConfig],
+                 backend: str = "auto", *, max_entries: int = 16,
+                 max_cap_doublings: int = 3):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.cfg_factory = cfg_factory
+        self.backend = backend
+        self.max_entries = max_entries
+        self.max_cap_doublings = max_cap_doublings
+        self._entries: OrderedDict[tuple, GuardedSolver] = OrderedDict()
+        self._stats: dict[int, dict] = {}
+
+    # -- bookkeeping --------------------------------------------------------
+
+    def _bucket_stats(self, bucket: int) -> dict:
+        return self._stats.setdefault(
+            bucket, {"hits": 0, "misses": 0, "evictions": 0})
+
+    def info(self) -> dict[int, BucketCacheStats]:
+        """Per-bucket counters (plus ``currsize``/``maxsize`` totals via
+        ``len(cache)`` and ``cache.max_entries``)."""
+        return {b: BucketCacheStats(s["hits"], s["misses"], s["evictions"])
+                for b, s in sorted(self._stats.items())}
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._stats.clear()
+
+    # -- the executable cache ----------------------------------------------
+
+    def get(self, bucket: int, batch: int) -> tuple[GuardedSolver, bool]:
+        """The guarded executable of one (bucket, batch) shape class.
+
+        A hit returns the *same* ``GuardedSolver`` instance — including
+        any cap escalation its guard promoted from earlier traffic."""
+        key = (bucket, batch, self.backend)
+        stats = self._bucket_stats(bucket)
+        entry = self._entries.get(key)
+        if entry is not None:
+            stats["hits"] += 1
+            self._entries.move_to_end(key)
+            return entry, True
+        stats["misses"] += 1
+        entry = GuardedSolver(self.cfg_factory(bucket), self.backend,
+                              max_cap_doublings=self.max_cap_doublings)
+        self._entries[key] = entry
+        while len(self._entries) > self.max_entries:
+            (ev_bucket, _, _), _ = self._entries.popitem(last=False)
+            self._bucket_stats(ev_bucket)["evictions"] += 1
+        return entry, False
+
+    def warm(self, bucket: int, batch: int,
+             seed: int = 0) -> GuardedSolver:
+        """Precompile one shape class ahead of traffic: trace + compile
+        the batched health twin (the program guarded dispatch runs) on
+        synthetic particles. Idempotent; returns the cached entry."""
+        from ..data.synthetic import particles
+
+        guarded, _ = self.get(bucket, batch)
+        cfg = guarded.cfg
+        z, q = particles("uniform", bucket, seed)
+        zb = np.broadcast_to(np.asarray(z, dtype=cfg.complex_dtype),
+                             (batch, bucket))
+        qb = np.broadcast_to(np.asarray(q, dtype=cfg.complex_dtype),
+                             (batch, bucket))
+        solver = guarded.solver
+        jax.block_until_ready(
+            solver.apply_batched_with_health(jax.numpy.asarray(zb),
+                                             jax.numpy.asarray(qb))[0])
+        return guarded
+
+    def warm_all(self, buckets, batches) -> list[tuple[int, int]]:
+        """Warm the cross product ``buckets`` x ``batches``; returns the
+        warmed (bucket, batch) pairs in order."""
+        warmed = []
+        for b in buckets:
+            for w in batches:
+                self.warm(b, w)
+                warmed.append((b, w))
+        return warmed
+
+    def entry(self, bucket: int, batch: int) -> Optional[GuardedSolver]:
+        """Peek without touching LRU order or counters (tests)."""
+        return self._entries.get((bucket, batch, self.backend))

@@ -55,10 +55,13 @@ from .backends import Backend, get_backend
 # LRU of compiled solvers, keyed by (cfg, resolved backend name) — so
 # "auto" shares the entry of whatever backend it resolves to. Bounded:
 # per-workload tuning in a long-lived service mints fresh configs, and
-# each solver pins two compiled XLA programs. Evicted instances stay
-# usable by existing holders; only the cache forgets them — hit/miss/
-# eviction traffic is observable via ``FmmSolver.cache_info()`` (the
-# keyed-executable-cache seam of the serving roadmap item).
+# each solver pins up to six compiled XLA programs (entry points +
+# health twins). Eviction (and cache_clear) releases those programs via
+# ``_release_executables`` so they cannot strand device memory; evicted
+# instances stay usable by existing holders — the next call re-traces.
+# Hit/miss/eviction traffic is observable via ``FmmSolver.cache_info()``
+# (the keyed-executable-cache seam the serving plane builds on,
+# ``repro.serve.cache``).
 _CACHE: OrderedDict = OrderedDict()
 _CACHE_MAX = 64
 _CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
@@ -182,8 +185,9 @@ class FmmSolver:
             _CACHE_STATS["misses"] += 1
             solver = _CACHE[key] = cls(cfg, backend)
             while len(_CACHE) > _CACHE_MAX:
-                _CACHE.popitem(last=False)
+                _, evicted = _CACHE.popitem(last=False)
                 _CACHE_STATS["evictions"] += 1
+                evicted._release_executables()
         else:
             _CACHE_STATS["hits"] += 1
             _CACHE.move_to_end(key)
@@ -191,12 +195,34 @@ class FmmSolver:
 
     @classmethod
     def cache_clear(cls) -> None:
+        for solver in _CACHE.values():
+            solver._release_executables()
         _CACHE.clear()
         _CACHE_STATS.update(hits=0, misses=0, evictions=0)
 
     @classmethod
     def cache_size(cls) -> int:
         return len(_CACHE)
+
+    def _release_executables(self) -> None:
+        """Drop this solver's compiled XLA programs (ALL jitted entry
+        points, health twins included). Called on LRU eviction and on
+        ``cache_clear`` so an evicted solver cannot strand device
+        memory behind jit's trace cache: an evicted instance stays
+        *usable* by existing holders — the next call just re-traces.
+        """
+        for fn in (self._apply, self._apply_batched, self._apply_health,
+                   self._apply_batched_health, self._refresh,
+                   self._apply_plan):
+            fn.clear_cache()
+
+    def _compiled_program_count(self) -> int:
+        """How many compiled programs this solver currently pins across
+        its jitted entry points (the eviction-release regression gate)."""
+        return sum(fn._cache_size() for fn in
+                   (self._apply, self._apply_batched, self._apply_health,
+                    self._apply_batched_health, self._refresh,
+                    self._apply_plan))
 
     @classmethod
     def cache_info(cls) -> CacheInfo:

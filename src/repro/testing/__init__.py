@@ -2,13 +2,20 @@
 the CI fault-injection smoke job and operators drilling a deployment
 use them too).
 
-  faults   deterministic fault injectors that exercise every rung of
-           the guarded-execution recovery ladder (repro.solver.guard)
+  faults        deterministic fault injectors that exercise every rung
+                of the guarded-execution recovery ladder
+                (repro.solver.guard)
+  serve_faults  serving-plane fault injectors (poison request, cache
+                thrash, compile storm, latency spike) and the CI soak
+                (repro.serve)
 """
 from .faults import (force_cap_overflow, nan_coefficients, poison_input,
                      truncate_interaction_lists)
+from .serve_faults import (cache_thrash, compile_storm, latency_spike,
+                           poison_request)
 
 __all__ = [
     "force_cap_overflow", "nan_coefficients", "poison_input",
     "truncate_interaction_lists",
+    "cache_thrash", "compile_storm", "latency_spike", "poison_request",
 ]

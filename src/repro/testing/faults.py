@@ -28,8 +28,12 @@ The context managers patch at the module/registry seam that the
 compiled solvers trace through, and call ``FmmSolver.cache_clear()`` on
 enter AND exit: solvers built inside the context trace the fault,
 solvers built outside never share programs with them. Build the
-``GuardedSolver`` *inside* the context — a solver compiled before entry
-keeps its healthy compiled program (jit caches the trace).
+``GuardedSolver`` *inside* the context — ``cache_clear`` also releases
+compiled programs now (the eviction fix), so a solver built before
+entry re-traces on its next call: through the patched module seam while
+a connectivity fault is active (it sees the fault), but always with the
+backend hooks it captured at construction (a registry poison like
+``nan_coefficients`` never leaks into it).
 
 Run the CI smoke walk (every injector, full ladder, interpret mode):
 

@@ -1,0 +1,258 @@
+"""Deterministic fault injection for the serving plane (DESIGN.md §10).
+
+``repro.testing.faults`` drives the *per-call* recovery ladder; this
+module drives the *per-fleet* layer above it — the ``ServePlane``'s
+admission control, keyed executable cache, and degradation ladder.
+Each injector forces one serving failure mode:
+
+  poison_request    corrupt one request in a stream (NaN charge, Inf
+                    position, real-dtype z, or empty arrays) — must be
+                    refused at admission as a typed rejection without
+                    contaminating the batch it would have ridden in
+  cache_thrash      clamp the plan cache to one entry, so every bucket
+                    switch evicts and recompiles — eviction counters
+                    must tick and results must stay correct
+  compile_storm     swap in a dense bucket lattice so nearly every
+                    distinct N is its own shape class — the worst-case
+                    compile amplification the geometric lattice exists
+                    to prevent; serving must stay correct (just slow)
+  latency_spike     make every k-th guarded dispatch sleep — the
+                    ``StragglerMonitor`` wired into the plane must flag
+                    the spiked dispatches ``slow`` in their reports
+
+The context managers patch at instance/class seams and restore on exit.
+Unlike the solver-level injectors they do NOT clear the solver cache:
+the serving faults are *above* the compiled programs, which stay
+healthy throughout.
+
+Run the CI soak (ragged log-normal traffic, every injector, must finish
+with zero unhandled exceptions and every fault visible in a report):
+
+    PYTHONPATH=src python -m repro.testing.serve_faults
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+import numpy as np
+
+from ..serve.plane import ServePlane
+from ..solver.guard import GuardedSolver
+
+
+# ---------------------------------------------------------------------------
+# poison request (admission-control family)
+# ---------------------------------------------------------------------------
+
+POISON_KINDS = ("nan-q", "inf-z", "real-z", "empty")
+
+
+def poison_request(z, q, kind: str = "nan-q", idx: int = 0):
+    """Corrupt one (z, q) pair the way ragged traffic does (the same
+    flavors ``repro.data.ragged_requests`` injects). Returns new arrays;
+    the originals are untouched."""
+    z = np.asarray(z)
+    q = np.asarray(q)
+    if kind == "nan-q":
+        q = q.copy()
+        q[idx] = np.nan
+    elif kind == "inf-z":
+        z = z.copy()
+        z[idx] = np.inf + 0j
+    elif kind == "real-z":
+        z = z.real.copy()
+    elif kind == "empty":
+        z, q = z[:0], q[:0]
+    else:
+        raise ValueError(f"unknown poison kind {kind!r}; "
+                         f"pick from {POISON_KINDS}")
+    return z, q
+
+
+# ---------------------------------------------------------------------------
+# cache pressure (keyed-executable-cache family)
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def cache_thrash(plane: ServePlane, max_entries: int = 1):
+    """Clamp the plane's executable cache to ``max_entries`` so every
+    bucket switch evicts: the eviction path (including the solver-level
+    release of compiled programs underneath) runs on every dispatch.
+    Restores the original capacity (and nothing else) on exit — evicted
+    entries stay evicted, exactly like real cache pressure."""
+    orig = plane.cache.max_entries
+    plane.cache.max_entries = max(1, int(max_entries))
+    while len(plane.cache._entries) > plane.cache.max_entries:
+        (b, _, _), _ = plane.cache._entries.popitem(last=False)
+        plane.cache._bucket_stats(b)["evictions"] += 1
+    try:
+        yield plane
+    finally:
+        plane.cache.max_entries = orig
+
+
+@contextlib.contextmanager
+def compile_storm(plane: ServePlane, step: int = 8):
+    """Swap the plane's geometric lattice for a dense stride-``step``
+    one: nearly every distinct N becomes its own shape class, so traffic
+    that the geometric lattice would serve from a handful of programs
+    triggers a compile per size — the worst case the bucketing design
+    amortizes. Serving must remain correct under it."""
+    from ..serve.buckets import BucketLattice
+
+    orig = plane.lattice
+    lo = orig.sizes[0]
+    hi = orig.max_size
+    dense = tuple(range(lo, hi + 1, max(1, int(step))))
+    if dense[-1] != hi:
+        dense = dense + (hi,)
+    plane.lattice = BucketLattice(sizes=dense)
+    try:
+        yield plane
+    finally:
+        plane.lattice = orig
+
+
+# ---------------------------------------------------------------------------
+# latency spike (straggler-detection family)
+# ---------------------------------------------------------------------------
+
+@contextlib.contextmanager
+def latency_spike(every: int = 3, spike_s: float = 0.25,
+                  sleep=time.sleep):
+    """Make every ``every``-th guarded batched dispatch sleep ``spike_s``
+    before returning — a deterministic straggler. The plane's
+    ``StragglerMonitor`` must flag those dispatches (``slow=True`` in
+    the affected ``ServeReport``s). Patches at the ``GuardedSolver``
+    class seam so it hits cached executables too (the spike is in the
+    *launch*, not the program)."""
+    real = GuardedSolver.apply_batched_guarded
+    state = {"calls": 0}
+
+    def spiked(self, z, q):
+        state["calls"] += 1
+        out = real(self, z, q)
+        if state["calls"] % max(1, int(every)) == 0:
+            sleep(spike_s)
+        return out
+
+    GuardedSolver.apply_batched_guarded = spiked
+    try:
+        yield state
+    finally:
+        GuardedSolver.apply_batched_guarded = real
+
+
+# ---------------------------------------------------------------------------
+# CI soak: ragged traffic through every injector, zero unhandled errors
+# ---------------------------------------------------------------------------
+
+def _soak() -> int:     # pragma: no cover - exercised as a CI job
+    from ..data.synthetic import ragged_requests
+    from ..serve import BucketLattice, Request
+
+    t0 = time.perf_counter()
+    failures: list[str] = []
+
+    def gate(name, ok, detail=""):
+        print(("ok    " if ok else "FAIL  ") + f"{name:<32s} {detail}")
+        if not ok:
+            failures.append(name)
+
+    def plane_for(**kw):
+        kw.setdefault("max_batch", 4)
+        kw.setdefault("direct_max", 512)
+        return ServePlane(BucketLattice(sizes=(32, 64, 128)), **kw)
+
+    def traffic(num, seed, poison_rate=0.0, n_max=400):
+        return [(Request(z, q), kind) for _, z, q, kind in
+                ragged_requests(num, seed=seed, median_n=48, sigma=0.7,
+                                n_max=n_max, poison_rate=poison_rate)]
+
+    print("serve-soak: ragged traffic through every serving fault")
+
+    # phase 1 — poisoned ragged stream: every poison refused as a typed
+    # rejection, every clean request served, nothing raises
+    plane = ServePlane(BucketLattice(sizes=(32, 64, 128)),
+                       max_batch=4, direct_max=512)
+    waves = [traffic(12, seed=s, poison_rate=0.3) for s in (0, 1)]
+    served = rejected = 0
+    for wave in waves:
+        results = plane.serve([r for r, _ in wave])
+        for (req, kind), (phi, rep) in zip(wave, results):
+            print("   ", kind, rep.summary())
+            if kind == "ok":
+                ok = rep.status in ("ok", "recovered", "degraded") \
+                    and phi is not None and np.all(np.isfinite(phi))
+                served += 1
+            else:
+                ok = rep.status == "rejected" and rep.error is not None \
+                    and phi is None
+                rejected += 1
+            if not ok:
+                failures.append(f"poison-stream:req{rep.rid}:{kind}")
+    gate("poison-stream", not failures,
+         f"{served} served, {rejected} typed rejections")
+
+    # phase 2 — cache thrash: one-entry cache, alternating buckets;
+    # evictions must tick, answers must stay finite
+    plane = plane_for()
+    with cache_thrash(plane, max_entries=1):
+        wave = traffic(8, seed=7, n_max=120)
+        results = plane.serve([r for r, _ in wave])
+        bad = [rep.rid for phi, rep in results
+               if rep.status == "rejected" or phi is None
+               or not np.all(np.isfinite(phi))]
+    ev = sum(s.evictions for s in plane.cache.info().values())
+    gate("cache-thrash", not bad and ev > 0,
+         f"evictions={ev}, cache_size={len(plane.cache)}")
+
+    # phase 3 — compile storm: dense lattice, each size its own program;
+    # correctness must survive the worst-case compile amplification
+    plane = plane_for()
+    with compile_storm(plane, step=16):
+        wave = traffic(6, seed=11, n_max=120)
+        results = plane.serve([r for r, _ in wave])
+        bad = [rep.rid for phi, rep in results
+               if rep.status == "rejected" or phi is None]
+        buckets = {rep.bucket for _, rep in results}
+    gate("compile-storm", not bad and len(buckets) >= 3,
+         f"{len(buckets)} distinct shape classes compiled")
+
+    # phase 4 — latency spike: every 2nd dispatch sleeps; the straggler
+    # monitor must mark at least one dispatch slow in its reports
+    plane = plane_for()
+    plane.serve([r for r, _ in traffic(6, seed=13, n_max=120)])  # warm
+    with latency_spike(every=2, spike_s=0.5):
+        results = plane.serve([r for r, _ in traffic(10, seed=17,
+                                                     n_max=120)])
+    slow = [rep.rid for _, rep in results if rep.slow]
+    gate("latency-spike", len(slow) > 0,
+         f"slow reports: {slow or 'none'}")
+
+    # phase 5 — deadline pressure: a budget no dispatch can meet must
+    # surface as DeadlineExceededError, never hang or raise
+    plane = plane_for()
+    wave = traffic(4, seed=19, n_max=120)
+    results = plane.serve([Request(r.z, r.q, deadline_s=0.0)
+                           for r, _ in wave])
+    ddl = [rep for phi, rep in results
+           if rep.status == "rejected" and rep.error ==
+           "DeadlineExceededError" and rep.deadline_exceeded]
+    gate("deadline-pressure", len(ddl) == len(results),
+         f"{len(ddl)}/{len(results)} shed at admission")
+
+    stats = plane.stats()
+    print(f"soak stats (last plane): {stats['requests']} requests, "
+          f"{stats['dispatches']} dispatches, "
+          f"median dispatch {stats['dispatch_median_s']:.3f}s")
+    dt = time.perf_counter() - t0
+    print(f"serve-soak: "
+          f"{'FAILED ' + ','.join(failures) if failures else 'all ok'} "
+          f"({dt:.1f}s, zero unhandled exceptions)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":     # pragma: no cover
+    raise SystemExit(_soak())

@@ -1,0 +1,245 @@
+"""Serving plane: bucket lattice, padding exactness (property-based
+bucket-boundary parity), keyed executable cache, admission control,
+degradation ladder, and the straggler wiring."""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hypothesis_fallback import given, settings, st
+
+from repro.configs.fmm2d import fmm_config
+from repro.core import FmmConfig
+from repro.data.synthetic import particles, ragged_requests
+from repro.errors import ShapeError
+from repro.launch.runtime import StragglerMonitor
+from repro.serve import (BucketLattice, PlanCache, Request, ServePlane,
+                         pad_problem, unpad)
+from repro.solver import FmmSolver
+
+
+def _cheap_cfg(n: int) -> FmmConfig:
+    """Small-p f64 config for fast serving tests (compile cost, not
+    accuracy, dominates these)."""
+    return dataclasses.replace(fmm_config(n, p=6, dtype="f64"),
+                               strong_cap=48, weak_cap=96)
+
+
+def _plane(**kw) -> ServePlane:
+    kw.setdefault("backend", "reference")
+    kw.setdefault("cfg_factory", _cheap_cfg)
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("direct_max", 512)
+    return ServePlane(BucketLattice(sizes=(32, 64, 128)), **kw)
+
+
+def _mk(n, seed=0):
+    z, q = particles("uniform", n, seed)
+    return np.asarray(z), np.asarray(q)
+
+
+# ---------------------------------------------------------------------------
+# bucket lattice
+# ---------------------------------------------------------------------------
+
+def test_lattice_geometry_and_lookup():
+    lat = BucketLattice.geometric(64, 1024, factor=2.0)
+    assert lat.sizes == (64, 128, 256, 512, 1024)
+    assert lat.bucket_for(1) == 64
+    assert lat.bucket_for(64) == 64
+    assert lat.bucket_for(65) == 128
+    assert lat.bucket_for(1024) == 1024
+    assert lat.bucket_for(1025) is None
+    assert lat.next_larger(64) == 128
+    assert lat.next_larger(1024) is None
+    with pytest.raises(ValueError):
+        lat.bucket_for(0)
+    with pytest.raises(ValueError):
+        BucketLattice(sizes=(64, 64))
+    with pytest.raises(ValueError):
+        BucketLattice.geometric(64, 128, factor=1.0)
+
+
+# ---------------------------------------------------------------------------
+# padding: exactness properties
+# ---------------------------------------------------------------------------
+
+def test_pad_preserves_real_rows_bit_exactly():
+    z, q = _mk(50)
+    zp, qp = pad_problem(z, q, 64)
+    assert zp.shape == qp.shape == (64,)
+    np.testing.assert_array_equal(zp[:50], z)
+    np.testing.assert_array_equal(qp[:50], q)
+    np.testing.assert_array_equal(qp[50:], np.zeros(14, qp.dtype))
+    # deterministic in (seed, size, n)
+    zp2, _ = pad_problem(z, q, 64)
+    np.testing.assert_array_equal(zp, zp2)
+    with pytest.raises(ShapeError):
+        pad_problem(z, q, 32)
+
+
+def test_pad_never_coincides_even_after_f32_narrowing():
+    z, q = _mk(40, seed=2)
+    zp, _ = pad_problem(z, q, 256, dtype=np.complex64)
+    z32 = zp.astype(np.complex64)
+    assert np.unique(z32).size == z32.size, \
+        "padding collided with a real point (or itself) after f32 cast"
+
+
+def test_pad_terminates_on_degenerate_input():
+    # all-coincident input: zero-width bbox must widen, not spin forever
+    z = np.full(8, 0.25 + 0.25j)
+    q = np.ones(8) + 0j
+    zp, qp = pad_problem(z, q, 32)
+    assert np.unique(zp[8:]).size == 24
+    assert not np.isin(zp[8:], z).any()
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(-1, 1), st.integers(0, 3))
+def test_bucket_boundary_parity(delta, seed):
+    """Property (ISSUE satellite): padded bucket evaluation matches the
+    unpadded apply at <= 1e-10 rel in f64, for N exactly on a bucket
+    edge and edge +- 1, with zero-charge tail rows. The two runs use
+    different trees (rank-median splits see the tail), so they agree to
+    truncation error — p=30 puts that below the 1e-10 gate."""
+    edge = 64
+    n = edge + delta
+    z, q = _mk(n, seed=seed)
+    zj, qj = jnp.asarray(z), jnp.asarray(q)
+
+    cfg_exact = fmm_config(n, p=30, dtype="f64")
+    phi_ref = np.asarray(FmmSolver.build(cfg_exact, "reference")
+                         .apply(zj, qj))
+
+    bucket = BucketLattice(sizes=(edge, 2 * edge)).bucket_for(n)
+    cfg_pad = fmm_config(bucket, p=30, dtype="f64")
+    zp, qp = pad_problem(z, q, bucket, dtype=cfg_pad.complex_dtype)
+    phi_pad = unpad(np.asarray(
+        FmmSolver.build(cfg_pad, "reference")
+        .apply(jnp.asarray(zp), jnp.asarray(qp))), n)
+
+    scale = np.abs(phi_ref).max()
+    err = np.abs(phi_pad - phi_ref).max() / scale
+    assert err <= 1e-10, (n, bucket, err)
+
+
+# ---------------------------------------------------------------------------
+# keyed executable cache
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_counters_eviction_and_identity():
+    cache = PlanCache(_cheap_cfg, "reference", max_entries=2)
+    a, hit = cache.get(32, 1)
+    assert not hit
+    b, hit = cache.get(32, 1)
+    assert hit and b is a, "a cache hit must return the same guarded " \
+        "solver (promoted caps stick to the shape class)"
+    cache.get(64, 1)
+    cache.get(128, 1)      # evicts (32, 1) — LRU
+    info = cache.info()
+    assert info[32].hits == 1 and info[32].misses == 1
+    assert info[32].evictions == 1
+    assert len(cache) == 2
+    c, hit = cache.get(32, 1)
+    assert not hit and c is not a
+
+
+def test_plan_cache_warm_precompiles():
+    cache = PlanCache(_cheap_cfg, "reference", max_entries=4)
+    warmed = cache.warm_all([32], [1, 2])
+    assert warmed == [(32, 1), (32, 2)]
+    entry = cache.entry(32, 2)
+    assert entry is not None
+    assert entry.solver._compiled_program_count() >= 1, \
+        "warm() must actually compile the batched health twin"
+
+
+# ---------------------------------------------------------------------------
+# the plane: admission, dispatch, degradation
+# ---------------------------------------------------------------------------
+
+def test_serve_mixed_wave_statuses_and_parity():
+    plane = _plane()
+    z1, q1 = _mk(30, 1)
+    z2, q2 = _mk(64, 2)
+    zbig, qbig = _mk(200, 3)          # oversize for lattice -> direct
+    zpoison, qpoison = _mk(20, 4)
+    qpoison = qpoison.copy()
+    qpoison[0] = np.nan
+    results = plane.serve([
+        Request(z1, q1), Request(z2, q2), Request(zbig, qbig),
+        Request(zpoison, qpoison),
+        Request(np.linspace(0, 1, 16), np.ones(16) + 0j),   # real z
+        Request(*_mk(2000, 5)),                             # way oversize
+    ])
+    stat = [r.report.status for r in results]
+    assert stat[0] == stat[1] == "ok"
+    assert stat[2] == "degraded" and results[2].report.backend == "direct"
+    assert stat[3] == "rejected" and \
+        results[3].report.error == "NonFiniteInputError"
+    assert stat[4] == "rejected" and results[4].report.error == "DTypeError"
+    assert stat[5] == "rejected" and \
+        results[5].report.error == "OversizedRequestError"
+    # same-bucket requests share one dispatch; the answers are real
+    from repro.core.direct import direct_potential
+    for res, (z, q) in zip(results[:3], [(z1, q1), (z2, q2), (zbig, qbig)]):
+        ref = np.asarray(direct_potential(jnp.asarray(z), jnp.asarray(z),
+                                          jnp.asarray(q)))
+        err = np.abs(res.phi - ref).max() / np.abs(ref).max()
+        assert err < 1e-3, (res.report.rid, err)
+    stats = plane.stats()
+    assert stats["rejected"] == 3 and stats["requests"] == 6
+    assert results[0].report.summary().startswith("[serve:req0]")
+
+
+def test_serve_consumes_ragged_generator():
+    plane = _plane()
+    reqs = [Request(z, q) for _, z, q, _ in
+            ragged_requests(6, seed=5, median_n=40, sigma=0.4, n_max=100)]
+    results = plane.serve(reqs)
+    assert all(r.report.status in ("ok", "recovered", "degraded")
+               for r in results)
+    assert all(np.all(np.isfinite(r.phi)) for r in results)
+
+
+def test_serve_deadline_sheds_typed():
+    # a clock that jumps far past any budget between admission and
+    # dispatch: every request must shed as DeadlineExceededError
+    t = {"now": 0.0}
+
+    def clock():
+        t["now"] += 10.0
+        return t["now"]
+
+    plane = _plane(default_deadline_s=1.0, clock=clock, sleep=lambda s: None)
+    results = plane.serve([Request(*_mk(20, i)) for i in range(3)])
+    for phi, rep in results:
+        assert phi is None
+        assert rep.status == "rejected"
+        assert rep.error == "DeadlineExceededError"
+        assert rep.deadline_exceeded
+    assert plane.stats()["rejected"] == 3
+
+
+def test_straggler_monitor_flags_slow_dispatch():
+    """Satellite: the launch runtime's StragglerMonitor is the serving
+    plane's slow-request detector — a spiked dispatch must surface as
+    slow=True on its ServeReport."""
+    from repro.testing.serve_faults import latency_spike
+
+    # threshold 10x: immune to ordinary CPU timing jitter, but the
+    # injected 0.5s spike is ~100x the few-ms median
+    monitor = StragglerMonitor(window=16, threshold=10.0, warmup=1)
+    plane = _plane(max_batch=1, monitor=monitor)
+    z, q = _mk(20, 7)
+    plane.submit(z, q)                      # compile (warmup-excluded)
+    for i in range(6):                      # build the median history
+        plane.submit(*_mk(20, 10 + i))
+    assert plane.stats()["slow_dispatches"] == 0
+    with latency_spike(every=1, spike_s=0.5):
+        phi, rep = plane.submit(*_mk(20, 99))
+    assert rep.slow, "spiked dispatch not flagged by the monitor"
+    assert plane.stats()["slow_dispatches"] == 1
+    assert monitor.slow_steps, "monitor did not record the spike"

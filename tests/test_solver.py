@@ -438,3 +438,43 @@ def test_cache_info_counts_hits_misses_and_evictions(monkeypatch):
     zeroed = FmmSolver.cache_info()
     assert (zeroed.hits, zeroed.misses, zeroed.evictions,
             zeroed.currsize) == (0, 0, 0, 0)
+
+
+def test_eviction_releases_compiled_programs(monkeypatch):
+    """Regression: LRU eviction under _CACHE_MAX pressure must release
+    the evicted solver's compiled programs — health twins included —
+    instead of stranding them behind jit's trace cache; and
+    cache_clear() must reset them too."""
+    import dataclasses
+    from repro.solver import solver as solver_mod
+    FmmSolver.cache_clear()
+    monkeypatch.setattr(solver_mod, "_CACHE_MAX", 1)
+
+    cfg_a = dataclasses.replace(CFG64, p=3)
+    cfg_b = dataclasses.replace(CFG64, p=4)
+    z, q = particles("uniform", CFG64.n, 1)
+    z, q = jnp.asarray(z), jnp.asarray(q)
+
+    a = FmmSolver.build(cfg_a, "reference")
+    a.apply(z, q)                      # plain program
+    a.apply_with_health(z, q)          # health twin
+    assert a._compiled_program_count() >= 2
+
+    FmmSolver.build(cfg_b, "reference")    # evicts a
+    assert FmmSolver.cache_info().evictions == 1
+    assert a._compiled_program_count() == 0, \
+        "eviction stranded compiled programs (health twin leak)"
+
+    # the evicted instance stays usable — the next call re-traces
+    np.testing.assert_allclose(np.asarray(a.apply(z, q)),
+                               np.asarray(fmm_potential(z, q, cfg_a)),
+                               rtol=1e-12, atol=1e-12)
+    assert a._compiled_program_count() == 1
+
+    # cache_clear releases programs of everything still cached
+    b = FmmSolver.build(cfg_b, "reference")
+    b.apply(z, q)
+    assert b._compiled_program_count() >= 1
+    FmmSolver.cache_clear()
+    assert b._compiled_program_count() == 0
+    assert a._compiled_program_count() == 1    # uncached holder untouched
